@@ -1,0 +1,55 @@
+"""Kernel μ-benchmarks: the jnp oracle path is the CPU-meaningful timing;
+the Pallas path runs in interpret mode here (TPU is the target), so its
+numbers are correctness checks, not speed."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.kernels import ops, ref
+
+
+def bench_affinity():
+    rng = np.random.default_rng(0)
+    n_pad, dmax, k = 4096, 16, 16
+    nbr = jnp.asarray(rng.integers(0, n_pad, (n_pad, dmax)), jnp.int32)
+    wgt = jnp.asarray(rng.random((n_pad, dmax)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, k, (n_pad,)), jnp.int32)
+    f_ref = jax.jit(lambda: ref.affinity_ref(labels[nbr], wgt, k))
+    f_ref()  # compile
+    _, us = timed(lambda: f_ref().block_until_ready(), repeat=20)
+    flops = 2 * n_pad * dmax * k
+    row("lp_affinity_jnp/4096x16xk16", us, f"gflops={flops/us/1e3:.2f}")
+    out, us_p = timed(lambda: ops.lp_affinity(nbr, wgt, labels, k)
+                      .block_until_ready())
+    row("lp_affinity_pallas_interpret/4096x16xk16", us_p, "correctness-only")
+
+
+def bench_ssd():
+    rng = np.random.default_rng(0)
+    bh, l, p, n = 8, 2048, 64, 64
+    x = jnp.asarray(rng.standard_normal((bh, l, p)), jnp.float32)
+    ld = jnp.asarray(-0.1 - 0.3 * rng.random((bh, l)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((bh, l, n)) * 0.3, jnp.float32)
+    c = jnp.asarray(rng.standard_normal((bh, l, n)) * 0.3, jnp.float32)
+    from repro.models.mamba2 import ssd_chunked
+    f = jax.jit(lambda: ssd_chunked(x, ld, b, c))
+    f()
+    _, us = timed(lambda: f().block_until_ready(), repeat=5)
+    flops = bh * l * (2 * 128 * n + 2 * 128 * p + 4 * n * p)  # per-token chunk work
+    row("ssd_chunked_jnp/8x2048", us, f"gflops~{flops/us/1e3:.2f}")
+    f2 = jax.jit(lambda: ref.ssd_scan_ref(x, ld, b, c))
+    f2()
+    _, us2 = timed(lambda: f2().block_until_ready(), repeat=3)
+    row("ssd_sequential_ref/8x2048", us2, f"chunked_speedup={us2/us:.1f}x")
+
+
+def main():
+    bench_affinity()
+    bench_ssd()
+
+
+if __name__ == "__main__":
+    main()

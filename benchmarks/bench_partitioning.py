@@ -1,0 +1,86 @@
+"""Benchmarks for the paper's §4.1 use-case table: kaffpa presets on mesh vs
+social instances against baselines, KaBaPE strict balance, KaFFPaE budget
+runs, ParHIP, plus comm-volume objective."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core.evolve import kaffpaE
+from repro.core.initial import random_partition, bfs_grow_bisection
+from repro.core.kabape import kabape_refine
+from repro.core.kaffpa import kaffpa
+from repro.core.parhip import parhip
+from repro.core.partition import comm_volume, edge_cut, evaluate, is_feasible
+from repro.io.generators import barabasi_albert, grid2d, random_geometric, rmat
+
+
+def instances():
+    return {
+        "grid48": grid2d(48, 48),
+        "geo4k": random_geometric(4096, seed=1),
+        "ba4k": barabasi_albert(4096, 4, seed=1),
+        "rmat11": rmat(11, 6, seed=1),
+    }
+
+
+def bench_kaffpa_presets(k: int = 8):
+    for gname, g in instances().items():
+        social = gname in ("ba4k", "rmat11")
+        # baselines
+        p_rand = random_partition(g, k, seed=0)
+        row(f"baseline_random/{gname}/k{k}", 0, edge_cut(g, p_rand))
+        presets = ("fastsocial", "ecosocial", "strongsocial") if social \
+            else ("fast", "eco", "strong")
+        for preset in presets:
+            part, us = timed(kaffpa, g, k, 0.03, preset, 1)
+            ev = evaluate(g, part, k)
+            assert ev["feasible"], (gname, preset)
+            row(f"kaffpa_{preset}/{gname}/k{k}", us, ev["cut"])
+
+
+def bench_kabape():
+    g = grid2d(32, 32)
+    p = kaffpa(g, 4, 0.03, "fast", seed=2)
+    out, us = timed(kabape_refine, g, p, 4, 0.0)
+    row("kabape_eps0/grid32/k4", us,
+        f"cut={edge_cut(g, out)};feasible={is_feasible(g, out, 4, 0.0)}")
+
+
+def bench_kaffpaE(budget: float = 8.0):
+    g = grid2d(32, 32)
+    single = kaffpa(g, 4, 0.03, "fast", seed=3)
+    evo, us = timed(kaffpaE, g, 4, 0.03, "fast", 2, 2, budget, 3)
+    row("kaffpaE_8s/grid32/k4", us,
+        f"evo_cut={edge_cut(g, evo)};single_cut={edge_cut(g, single)}")
+
+
+def bench_comm_volume():
+    g = barabasi_albert(2048, 4, seed=2)
+    p_cut = kaffpaE(g, 8, 0.03, "fastsocial", 2, 2, 4.0, 1)
+    p_vol = kaffpaE(g, 8, 0.03, "fastsocial", 2, 2, 4.0, 1,
+                    optimize_comm_volume=True)
+    row("kaffpaE_maxvol/ba2k/k8", 0,
+        f"vol_opt={comm_volume(g, p_vol, 8).max()};"
+        f"cut_opt={comm_volume(g, p_cut, 8).max()}")
+
+
+def bench_parhip():
+    for gname, g in (("grid48", grid2d(48, 48)),
+                     ("ba4k", barabasi_albert(4096, 4, seed=1))):
+        pre = "fastsocial" if gname == "ba4k" else "fastmesh"
+        part, us = timed(parhip, g, 8, 0.03, pre, 1)
+        ev = evaluate(g, part, 8)
+        row(f"parhip_{pre}/{gname}/k8", us, ev["cut"])
+
+
+def main():
+    bench_kaffpa_presets()
+    bench_kabape()
+    bench_kaffpaE()
+    bench_comm_volume()
+    bench_parhip()
+
+
+if __name__ == "__main__":
+    main()

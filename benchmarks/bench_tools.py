@@ -1,0 +1,104 @@
+"""Benchmarks for separators (§2.8), edge partitioning (§2.7), node ordering
+(§2.9), process mapping (§2.6) and the exact solver (§2.10)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core.csr import Graph
+from repro.core.edgepart import edge_partition, naive_edge_partition
+from repro.core.ilp import ilp_exact, ilp_improve
+from repro.core.kaffpa import kaffpa
+from repro.core.mapping import (process_mapping, processor_distance_matrix,
+                                qap_cost)
+from repro.core.ordering import fast_reduced_nd, fill_in, reduced_nd, \
+    _min_degree_order
+from repro.core.partition import edge_cut, edge_partition_metrics
+from repro.core.separator import node_separator, \
+    partition_to_vertex_separator, verify_separator
+from repro.io.generators import barabasi_albert, grid2d, grid3d, \
+    random_geometric
+
+
+def bench_separator():
+    for gname, g in (("grid32", grid2d(32, 32)),
+                     ("geo2k", random_geometric(2048, seed=3))):
+        (sep, part), us = timed(node_separator, g, 0.2, "fast", 1)
+        assert verify_separator(g, part, sep, 2)
+        src = g.edge_sources()
+        cutedge = part[src] != part[g.adjncy]
+        triv = min(len(np.unique(src[cutedge & (part[src] == 0)])),
+                   len(np.unique(src[cutedge & (part[src] == 1)])))
+        row(f"separator_2way/{gname}", us, f"sep={len(sep)};boundary={triv}")
+        p4 = kaffpa(g, 4, 0.03, "fast", seed=1)
+        sep4, us4 = timed(partition_to_vertex_separator, g, p4, 4)
+        assert verify_separator(g, p4, sep4, 4)
+        row(f"separator_4way/{gname}", us4, len(sep4))
+
+
+def bench_edge_partition():
+    for gname, g in (("grid32", grid2d(32, 32)),
+                     ("ba2k", barabasi_albert(2048, 4, seed=1))):
+        preset = "fastsocial" if gname == "ba2k" else "fast"
+        ep, us = timed(edge_partition, g, 8, 0.05, preset, 1000, 1)
+        m = edge_partition_metrics(g, ep, 8)
+        nv = edge_partition_metrics(g, naive_edge_partition(g, 8), 8)
+        row(f"edgepart_spac/{gname}/k8", us,
+            f"repl={m['replication']:.3f};naive={nv['replication']:.3f}")
+
+
+def bench_ordering():
+    for gname, g in (("grid16", grid2d(16, 16)), ("grid3d8", grid3d(8, 8, 8))):
+        order, us = timed(fast_reduced_nd, g, 1)
+        fnd = fill_in(g, order)
+        fnat = fill_in(g, np.arange(g.n))
+        fmd = fill_in(g, _min_degree_order(g))
+        row(f"ordering_nd/{gname}", us,
+            f"fill={fnd};natural={fnat};mindeg={fmd}")
+
+
+def bench_mapping():
+    rng = np.random.default_rng(0)
+    k = 64
+    comm = np.zeros((k, k), dtype=np.int64)
+    perm = rng.permutation(k)
+    for c in range(8):                       # 8 chatty groups of 8
+        ids = perm[c * 8:(c + 1) * 8]
+        for i in ids:
+            for j in ids:
+                if i != j:
+                    comm[i, j] = rng.integers(50, 150)
+    comm = (comm + comm.T) // 2
+    hierarchy, dists = [4, 4, 4], [1, 10, 100]
+    dist = processor_distance_matrix(hierarchy, dists)
+    mapping, us = timed(process_mapping, comm, hierarchy, dists)
+    q_map = qap_cost(comm, dist, mapping)
+    q_id = qap_cost(comm, dist, np.arange(k))
+    q_rnd = qap_cost(comm, dist, rng.permutation(k))
+    row("process_mapping/64proc", us,
+        f"qap={q_map};identity={q_id};random={q_rnd}")
+
+
+def bench_exact():
+    # ring: known optimum
+    n = 12
+    ring = Graph.from_edges(n, np.arange(n), (np.arange(n) + 1) % n)
+    part, us = timed(ilp_exact, ring, 3, 0.0, 30, 1)
+    row("ilp_exact/ring12/k3", us, f"cut={edge_cut(ring, part)};opt=3")
+    g = grid2d(12, 12)
+    p0 = kaffpa(g, 4, 0.03, "fast", seed=4)
+    p1, us = timed(ilp_improve, g, p0, 4)
+    row("ilp_improve/grid12/k4", us,
+        f"before={edge_cut(g, p0)};after={edge_cut(g, p1)}")
+
+
+def main():
+    bench_separator()
+    bench_edge_partition()
+    bench_ordering()
+    bench_mapping()
+    bench_exact()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Shared benchmark helpers: timing + CSV emission.
+
+Every bench prints ``name,us_per_call,derived`` rows (derived = the
+paper-relevant quality metric: cut, replication, QAP, fill-in, …).
+"""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6
+
+
+def row(name: str, us: float, derived) -> str:
+    line = f"{name},{us:.0f},{derived}"
+    print(line, flush=True)
+    return line

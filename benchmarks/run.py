@@ -1,0 +1,35 @@
+"""Benchmark driver (deliverable d): one section per paper table/use-case.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Roofline tables (deliverable
+g) are produced by ``benchmarks/roofline.py`` from the dry-run artifacts.
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import bench_partitioning, bench_tools, bench_kernels
+    print("name,us_per_call,derived")
+    print("# --- kaffpa presets / kabape / kaffpaE / parhip (paper §2.1-2.5)")
+    bench_partitioning.main()
+    print("# --- separators / edge partitioning / ordering / mapping / ILP "
+          "(paper §2.6-2.10)")
+    bench_tools.main()
+    print("# --- kernels (DESIGN.md §6)")
+    bench_kernels.main()
+    print("# --- roofline (from dry-run artifacts, if present)")
+    try:
+        from benchmarks import roofline
+        cells = roofline.load_cells()
+        if cells:
+            md, _ = roofline.render(cells)
+            for ln in md.splitlines():
+                print("#", ln)
+        else:
+            print("# (no dry-run artifacts; run python -m repro.launch.dryrun"
+                  " --all)")
+    except Exception as e:  # pragma: no cover
+        print(f"# roofline unavailable: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Process mapping end-to-end (paper §2.6 + DESIGN.md §3):
+
+1. partition an application graph into k = prod(hierarchy) blocks,
+2. map blocks onto the hierarchical machine (global multisection + swaps),
+3. ALSO: map the LM train step's collective traffic onto the TPU pod
+   hierarchy — the paper's technique steering the ML framework's mesh.
+
+    PYTHONPATH=src python examples/partition_and_map.py
+"""
+import numpy as np
+
+from repro.core.mapping import (kaffpa_with_mapping, process_mapping,
+                                processor_distance_matrix, qap_cost)
+from repro.io.generators import random_geometric
+from repro.launch.topology import choose_axis_assignment
+
+
+def main():
+    # --- application graph → hierarchical machine (4 cores × 4 chips × 2)
+    g = random_geometric(2048, seed=1)
+    part, mapping, qap = kaffpa_with_mapping(g, "4:4:2", "1:10:100",
+                                             eps=0.03, preset="eco", seed=1)
+    print(f"kaffpa --enable_mapping: QAP cost {qap}")
+
+    # --- synthetic comm matrix: ring-heavy + random background
+    k = 32
+    rng = np.random.default_rng(0)
+    comm = np.zeros((k, k), dtype=np.int64)
+    for p in range(k):
+        comm[p, (p + 1) % k] = comm[(p + 1) % k, p] = 200
+    mapping = process_mapping(comm, "4:4:2", "1:10:100", seed=0)
+    dist = processor_distance_matrix([4, 4, 2], [1, 10, 100])
+    print(f"ring pattern: mapped QAP {qap_cost(comm, dist, mapping)} "
+          f"vs identity {qap_cost(comm, dist, np.arange(k))}")
+
+    # --- LM integration: which mesh axis goes on which hardware level?
+    # per-axis collective bytes as the dry-run measures them (example values
+    # from minicpm train_4k: FSDP all-gathers dominate on 'data')
+    axis_bytes = {"data": 4.1e9, "model": 0.9e9, "pod": 0.4e9}
+    axis_sizes = {"data": 16, "model": 16, "pod": 2}
+    out = choose_axis_assignment(axis_bytes, axis_sizes,
+                                 hierarchy=(16, 16, 2),
+                                 distances=(1, 10, 100), seed=0)
+    print(f"mesh-axis mapping: QAP {out['qap']} vs identity "
+          f"{out['identity_qap']} (improvement {out['improvement']:.1%})")
+
+
+if __name__ == "__main__":
+    main()

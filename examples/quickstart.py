@@ -1,0 +1,59 @@
+"""Quickstart: partition a graph with every major KaHIP entry point.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.io.generators import grid2d, barabasi_albert
+from repro.io.metis import write_metis, write_partition, graphchecker
+from repro.core.kaffpa import kaffpa
+from repro.core.kabape import kabape_refine
+from repro.core.partition import evaluate
+from repro.core.separator import node_separator
+from repro.core.edgepart import edge_partition
+from repro.core.partition import edge_partition_metrics
+from repro.core import interface as api
+
+
+def main():
+    g = grid2d(32, 32)
+    print(f"mesh graph: n={g.n} m={g.m}")
+
+    # --- kaffpa presets (paper §4.1)
+    for preset in ("fast", "eco", "strong"):
+        part = kaffpa(g, 4, eps=0.03, preset=preset, seed=1)
+        print(f"kaffpa --preconfiguration={preset:7s}:",
+              evaluate(g, part, 4))
+
+    # --- perfectly balanced (KaBaPE, §2.3)
+    part0 = kaffpa(g, 4, 0.03, "fast", seed=1)
+    part_b = kabape_refine(g, part0, 4, eps=0.0)
+    print("kabape eps=0:", evaluate(g, part_b, 4, eps=0.0))
+
+    # --- social preset on a scale-free graph (§2.4)
+    b = barabasi_albert(2048, 4, seed=1)
+    part_s = kaffpa(b, 8, 0.03, "fastsocial", seed=1)
+    print("kaffpa fastsocial on BA graph:", evaluate(b, part_s, 8))
+
+    # --- node separator (§2.8)
+    sep, two = node_separator(g, eps=0.2, preset="fast", seed=1)
+    print(f"2-way node separator: {len(sep)} vertices")
+
+    # --- edge partition (§2.7)
+    ep = edge_partition(g, 4, preset="fast", seed=1)
+    print("SPAC edge partition:", edge_partition_metrics(g, ep, 4))
+
+    # --- file formats + checker (§3)
+    write_metis(g, "/tmp/quickstart.graph")
+    assert graphchecker("/tmp/quickstart.graph") == []
+    write_partition(part0, "/tmp/tmppartition4")
+    print("wrote /tmp/quickstart.graph + /tmp/tmppartition4 (metis formats)")
+
+    # --- the C-style library interface (§5)
+    cut, part = api.kaffpa(g.n, None, g.xadj, None, g.adjncy,
+                           nparts=2, imbalance=0.03, seed=0, mode=api.ECO)
+    print(f"library kaffpa(k=2): edgecut={cut}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: KaHIP-in-JAX + multi-pod LM framework."""
+__version__ = "3.0.0"

@@ -1,0 +1,186 @@
+"""KaFFPaE / KaBaPE — the distributed evolutionary partitioner (paper §2.2).
+
+Island model: every island keeps a population of partitions and applies
+*combine* and *mutation* operators built from KaFFPa itself.
+
+Combine (the paper's key operator): coarsening is modified so that no cut
+edge of either parent is contracted — both parents stay representable at the
+coarsest level, the better parent seeds the initial partition, and refinement
+(which never worsens) assembles good parts of both.  Clusters are split by
+the parents' block signatures before contraction, which *guarantees* the
+invariant (DESIGN.md §2).
+
+The MPI rumor-spreading exchange is modelled by the island topology: after
+every generation each island pushes its best individual to a uniformly
+random other island (exactly the randomized rumor-spreading step; with
+shard_map islands this becomes a collective_permute — see parhip.py for the
+collective formulation of the distributed phases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.csr import Graph
+from repro.core import coarsen as C
+from repro.core import kaffpa as K
+from repro.core import refine as R
+from repro.core.partition import edge_cut, is_feasible, comm_volume
+from repro.core.kabape import kabape_refine
+
+
+@dataclasses.dataclass
+class Individual:
+    part: np.ndarray
+    fitness: float
+
+
+def _fitness(g: Graph, part: np.ndarray, k: int,
+             optimize_comm_volume: bool) -> float:
+    if optimize_comm_volume:
+        return float(comm_volume(g, part, k).max())
+    return float(edge_cut(g, part))
+
+
+def combine(g: Graph, pa: np.ndarray, pb: np.ndarray, k: int, eps: float,
+            cfg: K.KaffpaConfig, seed: int) -> np.ndarray:
+    """The KaFFPaE combine operator.
+
+    ``pb`` may be *any* domain-specific clustering/partition (the paper
+    stresses this flexibility) — only ``pa`` must be a feasible k-partition.
+    The offspring never has a worse cut than the better *valid* parent: the
+    better one seeds the protected coarsest level and refinement never
+    worsens.
+    """
+    if pb.max() < k and edge_cut(g, pb) < edge_cut(g, pa):
+        pa, pb = pb, pa              # seed from the better valid parent
+    src = g.edge_sources()
+    forbidden = (pa[src] != pa[g.adjncy]) | (pb[src] != pb[g.adjncy])
+    # build a protected hierarchy; split every cluster by (pa, pb) signature
+    levels = [(g, None)]
+    cur, cur_pa, cur_pb = g, pa, pb
+    stop_n = max(cfg.contraction_stop_factor * k, 64)
+    lvl = 0
+    cur_forbidden = forbidden
+    while cur.n > stop_n:
+        max_cw = max(1.0, cur.total_vwgt() / (cfg.cluster_weight_factor * k))
+        mode = "lp" if cfg.coarsening == "lp" else "matching"
+        if mode == "matching":
+            clusters = C.heavy_edge_matching(cur, seed=seed + 31 * lvl,
+                                             max_cluster_weight=max_cw,
+                                             forbidden=cur_forbidden)
+        else:
+            clusters = C.lp_clustering(cur, max_cw, seed=seed + 31 * lvl,
+                                       forbidden=cur_forbidden)
+        # split clusters by parent signatures → parents stay representable
+        sig = clusters * (k * k) + cur_pa * k + cur_pb
+        coarse, cl = C.contract(cur, sig)
+        if coarse.n >= cur.n * 0.95:
+            break
+        levels.append((coarse, cl))
+        # push parents + forbidden mask to coarse level
+        nc = coarse.n
+        npa = np.zeros(nc, dtype=np.int64)
+        npb = np.zeros(nc, dtype=np.int64)
+        npa[cl] = cur_pa
+        npb[cl] = cur_pb
+        csrc = coarse.edge_sources()
+        cur_forbidden = ((npa[csrc] != npa[coarse.adjncy])
+                         | (npb[csrc] != npb[coarse.adjncy]))
+        cur, cur_pa, cur_pb = coarse, npa, npb
+        lvl += 1
+    # the better parent seeds the coarsest level
+    part_c = cur_pa
+    part_c = K._refine_level(levels[-1][0], part_c, k, eps, cfg, seed)
+    out = K._uncoarsen(levels, part_c, k, eps, cfg, seed)
+    return out
+
+
+def mutate(g: Graph, part: np.ndarray, k: int, eps: float,
+           cfg: K.KaffpaConfig, seed: int) -> np.ndarray:
+    """Mutation = V-cycle with a fresh seed (paper: KaFFPa provides it)."""
+    return K.vcycle(g, part, k, eps, cfg, seed)
+
+
+def kaffpaE(g: Graph, k: int, eps: float = 0.03, preset: str = "fast",
+            n_islands: int = 4, population: int = 4,
+            time_limit: float = 10.0, seed: int = 0,
+            optimize_comm_volume: bool = False,
+            enable_kabape: bool = False,
+            kabaE_internal_bal: float = 0.01,
+            quickstart: bool = False,
+            on_generation: Optional[Callable] = None) -> np.ndarray:
+    """The ``kaffpaE`` program (paper §4.2).
+
+    time_limit == 0 → only the initial population is created (paper
+    semantics).  With ``enable_kabape`` offspring get the KaBaPE
+    negative-cycle polish at the strict balance constraint.
+    """
+    cfg = K.PRESETS[preset]
+    rng = np.random.default_rng(seed)
+    t0 = time.monotonic()
+    fit = lambda p: _fitness(g, p, k, optimize_comm_volume)  # noqa: E731
+
+    islands: list[list[Individual]] = []
+    pop0 = max(1, population // 2) if quickstart else population
+    for isl in range(n_islands):
+        pop = []
+        for j in range(pop0):
+            p = K.multilevel_partition(g, k, eps, cfg,
+                                       seed + 1009 * isl + 31 * j)
+            pop.append(Individual(p, fit(p)))
+        islands.append(pop)
+    if quickstart:
+        # each island created a few; distribute them among all islands
+        every = [ind for pop in islands for ind in pop]
+        for isl in range(n_islands):
+            extra = rng.choice(len(every), size=population - pop0,
+                               replace=False)
+            islands[isl].extend(Individual(every[e].part.copy(),
+                                           every[e].fitness) for e in extra)
+
+    gen = 0
+    while time.monotonic() - t0 < time_limit:
+        gen += 1
+        for isl in range(n_islands):
+            pop = islands[isl]
+            if rng.random() < 0.9 and len(pop) >= 2:
+                # tournament parents
+                ia, ib = rng.choice(len(pop), size=2, replace=False)
+                pa = min(pop[ia], pop[ib], key=lambda x: x.fitness)
+                others = [p for j, p in enumerate(pop) if j not in (ia, ib)]
+                pb = min(others, key=lambda x: x.fitness) if others else pa
+                child = combine(g, pa.part, pb.part, k, eps, cfg,
+                                seed + 7919 * gen + isl)
+            else:
+                src = pop[int(rng.integers(len(pop)))]
+                child = mutate(g, src.part, k, eps, cfg,
+                               seed + 104729 * gen + isl)
+            if enable_kabape:
+                child = kabape_refine(g, child, k, eps,
+                                      internal_bal=kabaE_internal_bal,
+                                      seed=seed + gen)
+            f = fit(child)
+            worst = max(range(len(pop)), key=lambda j: pop[j].fitness)
+            if f <= pop[worst].fitness:
+                pop[worst] = Individual(child, f)
+        # rumor spreading: each island pushes its best to a random island
+        for isl in range(n_islands):
+            best = min(islands[isl], key=lambda x: x.fitness)
+            tgt = int(rng.integers(n_islands))
+            if tgt != isl:
+                w = max(range(len(islands[tgt])),
+                        key=lambda j: islands[tgt][j].fitness)
+                if best.fitness < islands[tgt][w].fitness:
+                    islands[tgt][w] = Individual(best.part.copy(),
+                                                 best.fitness)
+        if on_generation is not None:
+            on_generation(gen, min(i.fitness for pop in islands for i in pop))
+
+    allind = [i for pop in islands for i in pop]
+    feas = [i for i in allind if is_feasible(g, i.part, k, eps)]
+    pool = feas if feas else allind
+    return min(pool, key=lambda x: x.fitness).part

@@ -1,0 +1,113 @@
+"""The KaHIP library interface (paper §5) — Python mirror of
+``interface/kaHIP_interface.h``.
+
+Functions take the CSR arrays (n, vwgt, xadj, adjcwgt, adjncy) exactly as the
+C API does (vwgt/adjcwgt may be None) and return the C API's output
+parameters as Python values.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.csr import Graph
+
+# mode constants (paper §5.2)
+FAST, ECO, STRONG, FASTSOCIAL, ECOSOCIAL, STRONGSOCIAL = range(6)
+_MODE_NAMES = {FAST: "fast", ECO: "eco", STRONG: "strong",
+               FASTSOCIAL: "fastsocial", ECOSOCIAL: "ecosocial",
+               STRONGSOCIAL: "strongsocial"}
+
+MAPMODE_MULTISECTION = 0
+MAPMODE_BISECTION = 1
+
+
+def _graph(n, vwgt, xadj, adjcwgt, adjncy) -> Graph:
+    return Graph.from_arrays(np.asarray(xadj), np.asarray(adjncy),
+                             None if vwgt is None else np.asarray(vwgt),
+                             None if adjcwgt is None else np.asarray(adjcwgt))
+
+
+def kaffpa(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
+           imbalance: float, suppress_output: bool = True, seed: int = 0,
+           mode: int = ECO):
+    """Main partitioner call → (edgecut, part)."""
+    from repro.core import kaffpa as K
+    from repro.core.partition import edge_cut
+    g = _graph(n, vwgt, xadj, adjcwgt, adjncy)
+    part = K.kaffpa(g, nparts, imbalance, _MODE_NAMES[mode], seed=seed)
+    return edge_cut(g, part), part
+
+
+def kaffpa_balance_NE(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
+                      imbalance: float, suppress_output: bool = True,
+                      seed: int = 0, mode: int = ECO):
+    """Node+edge balanced partitioner call → (edgecut, part)."""
+    from repro.core import kaffpa as K
+    from repro.core.partition import edge_cut
+    g = _graph(n, vwgt, xadj, adjcwgt, adjncy)
+    part = K.kaffpa(g, nparts, imbalance, _MODE_NAMES[mode], seed=seed,
+                    balance_edges=True)
+    return edge_cut(g, part), part
+
+
+def node_separator(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
+                   imbalance: float, suppress_output: bool = True,
+                   seed: int = 0, mode: int = ECO):
+    """→ (num_separator_vertices, separator ids).
+
+    nparts == 2 recommended when separator size is the objective (§5.2).
+    """
+    from repro.core import kaffpa as K
+    from repro.core import separator as S
+    g = _graph(n, vwgt, xadj, adjcwgt, adjncy)
+    part = K.kaffpa(g, nparts, imbalance, _MODE_NAMES[mode], seed=seed)
+    if nparts == 2:
+        sep, _ = S.node_separator(g, imbalance, _MODE_NAMES[mode], seed,
+                                  part=part)
+    else:
+        sep = S.partition_to_vertex_separator(g, part, nparts)
+    return len(sep), sep
+
+
+def reduced_nd(n: int, xadj, adjncy, suppress_output: bool = True,
+               seed: int = 0, mode: int = ECO):
+    """Node ordering → ordering array (ordering[v] = elimination position)."""
+    from repro.core import ordering as O
+    g = _graph(n, None, xadj, None, adjncy)
+    order = O.reduced_nd(g, _MODE_NAMES[mode], seed=seed)
+    inv = np.empty(g.n, dtype=np.int64)
+    inv[order] = np.arange(g.n)
+    return inv
+
+
+def fast_reduced_nd(n: int, xadj, adjncy, suppress_output: bool = True,
+                    seed: int = 0, mode: int = FAST):
+    from repro.core import ordering as O
+    g = _graph(n, None, xadj, None, adjncy)
+    order = O.fast_reduced_nd(g, seed=seed)
+    inv = np.empty(g.n, dtype=np.int64)
+    inv[order] = np.arange(g.n)
+    return inv
+
+
+def process_mapping(n: int, vwgt, xadj, adjcwgt, adjncy,
+                    hierarchy_parameter: Sequence[int],
+                    distance_parameter: Sequence[int],
+                    hierarchy_depth: int, imbalance: float,
+                    suppress_output: bool = True, seed: int = 0,
+                    mode_partitioning: int = ECO,
+                    mode_mapping: int = MAPMODE_MULTISECTION):
+    """→ (edgecut, qap, part) — §5.2 Process Mapping."""
+    from repro.core import mapping as M
+    from repro.core.partition import edge_cut
+    g = _graph(n, vwgt, xadj, adjcwgt, adjncy)
+    hierarchy = list(hierarchy_parameter)[:hierarchy_depth]
+    distances = list(distance_parameter)[:hierarchy_depth]
+    part, mapping, qap = M.kaffpa_with_mapping(
+        g, hierarchy, distances, imbalance,
+        _MODE_NAMES[mode_partitioning], seed=seed)
+    # remap block ids through the processor assignment
+    final = mapping[part]
+    return edge_cut(g, final), qap, final

@@ -1,0 +1,203 @@
+"""KaFFPa — the multilevel partitioner (paper §2.1, §4.1).
+
+Preconfigurations follow the paper's use-case table: {fast, eco, strong} for
+mesh-like graphs (matching coarsening) and {fastsocial, ecosocial,
+strongsocial} for social networks (size-constrained LP coarsening, §2.4).
+
+`strong` additionally runs pairwise max-flow refinement on small levels and
+an iterated V-cycle with cut-edge-protected re-coarsening (§2.1, Walshaw
+iterated multilevel — quality is non-decreasing because refinement never
+worsens and protected coarsening keeps the current partition representable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.csr import Graph, to_coo
+from repro.core import coarsen as C
+from repro.core import initial as I
+from repro.core import refine as R
+from repro.core.partition import edge_cut, is_feasible, block_weights
+
+
+@dataclasses.dataclass
+class KaffpaConfig:
+    coarsening: str = "matching"        # matching | lp
+    lp_iters: int = 8
+    refine_rounds: int = 10
+    multi_try: int = 0                  # localized-search restarts per level
+    use_flow: bool = False              # pairwise max-flow refinement
+    flow_max_n: int = 6000
+    initial_tries: int = 4
+    vcycles: int = 1                    # iterated multilevel cycles
+    contraction_stop_factor: int = 40   # stop coarsening at ~factor*k nodes
+    cluster_weight_factor: float = 3.0  # max cluster weight = W/(factor*k)
+
+
+PRESETS = {
+    "fast":         KaffpaConfig(coarsening="matching", refine_rounds=6,
+                                 initial_tries=2),
+    "eco":          KaffpaConfig(coarsening="matching", refine_rounds=10,
+                                 multi_try=2, initial_tries=4),
+    "strong":       KaffpaConfig(coarsening="matching", refine_rounds=14,
+                                 multi_try=3, use_flow=True, initial_tries=6,
+                                 vcycles=2),
+    "fastsocial":   KaffpaConfig(coarsening="lp", refine_rounds=6,
+                                 initial_tries=2),
+    "ecosocial":    KaffpaConfig(coarsening="lp", refine_rounds=10,
+                                 multi_try=2, initial_tries=4),
+    "strongsocial": KaffpaConfig(coarsening="lp", refine_rounds=14,
+                                 multi_try=3, use_flow=True, initial_tries=6,
+                                 vcycles=2),
+}
+
+
+def _build_hierarchy(g: Graph, k: int, cfg: KaffpaConfig, seed: int,
+                     forbidden: Optional[np.ndarray] = None):
+    """Coarsen until ~contraction_stop_factor*k nodes; returns level list.
+
+    levels = [(g0, None), (g1, cl0), ...] where cl maps level-i nodes to
+    level-(i+1) nodes.
+    """
+    levels = [(g, None)]
+    cur, cur_forbidden = g, forbidden
+    stop_n = max(cfg.contraction_stop_factor * k, 64)
+    lvl = 0
+    while cur.n > stop_n:
+        max_cw = max(1.0, cur.total_vwgt() / (cfg.cluster_weight_factor * k))
+        res = C.coarsen_level(cur, "lp" if cfg.coarsening == "lp" else "matching",
+                              max_cw, seed + 31 * lvl, forbidden=cur_forbidden)
+        if res is None:
+            break
+        coarse, cl = res
+        levels.append((coarse, cl))
+        if cur_forbidden is not None:
+            # push the protected-edge mask to the coarse level
+            src = coarse.edge_sources()
+            # recompute from scratch: an edge (cu, cv) is protected iff any
+            # protected fine edge maps onto it
+            fsrc = cur.edge_sources()
+            pko = cur_forbidden & (cl[fsrc] != cl[cur.adjncy])
+            prot_pairs = set(zip(cl[fsrc[pko]].tolist(),
+                                 cl[cur.adjncy[pko]].tolist()))
+            cur_forbidden = np.fromiter(
+                ((int(a), int(b)) in prot_pairs
+                 for a, b in zip(src, coarse.adjncy)),
+                dtype=bool, count=len(coarse.adjncy))
+        cur = coarse
+        lvl += 1
+    return levels
+
+
+def _uncoarsen(levels, part_coarse: np.ndarray, k: int, eps: float,
+               cfg: KaffpaConfig, seed: int) -> np.ndarray:
+    part = part_coarse
+    for li in range(len(levels) - 1, 0, -1):
+        g_fine, _ = levels[li - 1]
+        _, cl = levels[li]
+        part = C.project(part, cl)
+        part = _refine_level(g_fine, part, k, eps, cfg, seed + li)
+    return part
+
+
+def _refine_level(g: Graph, part: np.ndarray, k: int, eps: float,
+                  cfg: KaffpaConfig, seed: int) -> np.ndarray:
+    coo = to_coo(g)
+    force = not is_feasible(g, part, k, eps)
+    part = R.refine_kway(g, part, k, eps, rounds=cfg.refine_rounds,
+                         seed=seed, coo=coo, force_balance=force)
+    if cfg.multi_try:
+        part = R.multi_try_refine(g, part, k, eps, tries=cfg.multi_try,
+                                  rounds=max(4, cfg.refine_rounds // 2),
+                                  seed=seed, coo=coo)
+    if cfg.use_flow and g.n <= cfg.flow_max_n and k <= 16:
+        part = R.flow_refine_all_pairs(g, part, k, eps, seed=seed)
+    return part
+
+
+def _initial_partition(g: Graph, k: int, eps: float, cfg: KaffpaConfig,
+                       seed: int) -> np.ndarray:
+    def refine2(sub: Graph, two: np.ndarray, frac0: float) -> np.ndarray:
+        fr = np.asarray([frac0, 1.0 - frac0])
+        return R.refine_kway(sub, two, 2, eps, rounds=cfg.refine_rounds,
+                             seed=seed, fractions=fr)
+    best, best_cut = None, np.inf
+    for t in range(cfg.initial_tries):
+        part = I.recursive_bisection(g, k, seed=seed + 101 * t,
+                                     refine_fn=refine2 if g.n <= 20000 else None)
+        part = _refine_level(g, part, k, eps, cfg, seed + t)
+        c = edge_cut(g, part)
+        if c < best_cut and is_feasible(g, part, k, eps):
+            best, best_cut = part, c
+        elif best is None:
+            best = part
+    return best
+
+
+def multilevel_partition(g: Graph, k: int, eps: float, cfg: KaffpaConfig,
+                         seed: int) -> np.ndarray:
+    levels = _build_hierarchy(g, k, cfg, seed)
+    g_c, _ = levels[-1]
+    part_c = _initial_partition(g_c, k, eps, cfg, seed)
+    return _uncoarsen(levels, part_c, k, eps, cfg, seed)
+
+
+def vcycle(g: Graph, part: np.ndarray, k: int, eps: float, cfg: KaffpaConfig,
+           seed: int) -> np.ndarray:
+    """Iterated multilevel: re-coarsen protecting the current partition's cut
+    edges, use it as the coarsest initial partition, refine on the way up.
+    Quality is non-decreasing (§2.1)."""
+    src = g.edge_sources()
+    forbidden = part[src] != part[g.adjncy]
+    levels = _build_hierarchy(g, k, cfg, seed, forbidden=forbidden)
+    # project the current partition down the protected hierarchy
+    part_c = part
+    for li in range(1, len(levels)):
+        _, cl = levels[li]
+        # all members of a cluster share a block (cut edges were protected)
+        nc = levels[li][0].n
+        pc = np.zeros(nc, dtype=np.int64)
+        pc[cl] = part_c
+        part_c = pc
+    part_c = _refine_level(levels[-1][0], part_c, k, eps, cfg, seed)
+    out = _uncoarsen(levels, part_c, k, eps, cfg, seed)
+    if edge_cut(g, out) <= edge_cut(g, part) and is_feasible(g, out, k, eps):
+        return out
+    return part
+
+
+def kaffpa(g: Graph, k: int, eps: float = 0.03, preset: str = "eco",
+           seed: int = 0, time_limit: float = 0.0,
+           input_partition: Optional[np.ndarray] = None,
+           enforce_balance: bool = False,
+           balance_edges: bool = False) -> np.ndarray:
+    """The ``kaffpa`` program (paper §4.1)."""
+    if balance_edges:
+        g = g.with_edge_balanced_weights()
+    cfg = PRESETS[preset]
+    if k <= 1:
+        return np.zeros(g.n, dtype=np.int64)
+    t0 = time.monotonic()
+    if input_partition is not None:
+        best = np.asarray(input_partition, dtype=np.int64)
+        best = _refine_level(g, best, k, eps, cfg, seed)
+    else:
+        best = multilevel_partition(g, k, eps, cfg, seed)
+    for cyc in range(1, cfg.vcycles):
+        best = vcycle(g, best, k, eps, cfg, seed + 7919 * cyc)
+    # repeated calls under a time budget (paper --time_limit)
+    trial = 1
+    while time_limit > 0 and time.monotonic() - t0 < time_limit:
+        cand = multilevel_partition(g, k, eps, cfg, seed + 104729 * trial)
+        if (edge_cut(g, cand) < edge_cut(g, best)
+                and is_feasible(g, cand, k, eps)):
+            best = cand
+        trial += 1
+    if enforce_balance and not is_feasible(g, best, k, eps):
+        best = R.refine_kway(g, best, k, eps, rounds=30, seed=seed,
+                             force_balance=True)
+    return best

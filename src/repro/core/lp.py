@@ -1,0 +1,189 @@
+"""Size-constrained label propagation (paper §2.4 / §4.10) — device side.
+
+This is the batch-synchronous, TPU-native formulation of KaHIP's LP (see
+DESIGN.md §2): per round every node computes its affinity to every candidate
+label in parallel, then a conflict-free subset of moves is applied with a
+hard size guarantee ("capped acceptance").
+
+Two regimes:
+  * clustering  — labels range over [0, n_pad) (coarsening;
+    ``label_propagation`` program).  Affinity via lexsort+segment over edges.
+  * k-way       — labels range over [0, k), k small (refinement).  Affinity is
+    a dense (n_pad, k) histogram == A @ onehot(labels); the Pallas kernel
+    (kernels/lp_affinity.py) implements exactly this product for the ELL
+    layout; the COO scatter here is the jnp fallback/oracle.
+
+All functions operate on pow2-padded arrays (see csr.CooGraph docstring), so
+jit caches hit across multilevel levels.  Padding rows have zero vertex and
+edge weight and never affect sizes, cuts, or gains.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr import CooGraph, Graph, to_coo
+
+_NEG = -1e30
+_NOISE = 1e-4          # random tie-break amplitude
+_GAIN_EPS = 1e-3       # strictly-positive-gain threshold (> noise)
+
+
+# ---------------------------------------------------------------------------
+# capped acceptance: apply proposed moves without exceeding target capacity
+# ---------------------------------------------------------------------------
+
+def capped_accept(labels: jax.Array, proposal: jax.Array, vwgt: jax.Array,
+                  sizes: jax.Array, cap: jax.Array,
+                  priority: jax.Array) -> jax.Array:
+    """Accept moves in priority order (desc) per target until capacity.
+
+    Guarantee: for every target t, size[t] + accepted_inflow[t] <= cap[t]
+    (outflow ignored → conservative).  Returns new labels.
+    """
+    n = labels.shape[0]
+    moving = proposal != labels
+    vw = jnp.where(moving, vwgt, 0.0)
+    # sort by (target, -priority): group per target, best first
+    order = jnp.lexsort((-priority, proposal))
+    t_s = proposal[order]
+    vw_s = vw[order]
+    cums = jnp.cumsum(vw_s)
+    newrun = jnp.concatenate([jnp.array([True]), t_s[1:] != t_s[:-1]])
+    base = jnp.where(newrun, cums - vw_s, -jnp.inf)
+    base = jax.lax.cummax(base)
+    inflow = cums - base                  # inclusive inflow within target run
+    ok_s = sizes[t_s] + inflow <= cap[t_s]
+    ok = jnp.zeros((n,), bool).at[order].set(ok_s)
+    return jnp.where(moving & ok, proposal, labels)
+
+
+# ---------------------------------------------------------------------------
+# k-way dense affinity (jnp oracle; Pallas kernel mirrors this on ELL)
+# ---------------------------------------------------------------------------
+
+def kway_affinity_coo(g: CooGraph, labels: jax.Array, k: int) -> jax.Array:
+    """aff[v, b] = total weight of edges from v into block b.  (n_pad, k)."""
+    tgt = labels[g.dst]
+    return jnp.zeros((g.n_pad, k), jnp.float32).at[g.src, tgt].add(g.w)
+
+
+def kway_lp_round(g: CooGraph, labels: jax.Array, sizes: jax.Array,
+                  cap: jax.Array, key: jax.Array, k: int,
+                  parity: jax.Array, active: Optional[jax.Array],
+                  allow_zero_gain: bool, force_balance: bool,
+                  affinity_fn=None) -> tuple:
+    """One batch-synchronous k-way LP/gain round; returns (labels, sizes)."""
+    n = g.n_pad
+    aff = (affinity_fn or kway_affinity_coo)(g, labels, k)
+    noise = jax.random.uniform(key, (n, k), jnp.float32, 0.0, _NOISE)
+    own = jnp.take_along_axis(aff, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
+    gain = aff - own[:, None] + noise
+    # own block is not a move target
+    gain = gain.at[jnp.arange(n), labels].set(_NEG)
+    # full targets are not candidates
+    vw = g.vwgt
+    room = sizes[None, :] + vw[:, None] <= cap[None, :]
+    gain = jnp.where(room, gain, _NEG)
+    best_gain = jnp.max(gain, axis=1)
+    best_tgt = jnp.argmax(gain, axis=1).astype(labels.dtype)
+    thresh = -_GAIN_EPS if allow_zero_gain else _GAIN_EPS
+    want = best_gain > thresh
+    if force_balance:
+        # overweight blocks push nodes out regardless of gain
+        over = sizes[labels] > cap[labels]
+        want = want | (over & (best_gain > _NEG / 2) & (vw > 0))
+    # parity tie-break (avoid A<->B swap oscillation)
+    node_par = (jnp.arange(n) + parity) % 2 == 0
+    want = want & node_par
+    if active is not None:
+        want = want & active
+    proposal = jnp.where(want, best_tgt, labels)
+    new_labels = capped_accept(labels, proposal, vw, sizes, cap,
+                               jnp.where(want, best_gain, _NEG))
+    new_sizes = jnp.zeros((k,), sizes.dtype).at[new_labels].add(vw)
+    return new_labels, new_sizes
+
+
+# ---------------------------------------------------------------------------
+# clustering LP (labels in [0, n_pad)) — lexsort+segment formulation
+# ---------------------------------------------------------------------------
+
+def _segment_affinity(g: CooGraph, labels: jax.Array, sizes: jax.Array,
+                      cap: jax.Array, key: jax.Array):
+    """Per node: best cluster among neighbours under the size constraint.
+
+    Returns (best_label, best_aff, own_aff) arrays of length n_pad.
+    """
+    n = g.n_pad
+    e = g.e_pad
+    tgt = labels[g.dst]
+    order = jnp.lexsort((tgt, g.src))          # runs of equal (src, tgt)
+    src_e = g.src[order]
+    lab_e = tgt[order]
+    ws = g.w[order]
+    newrun = jnp.concatenate(
+        [jnp.array([True]),
+         (src_e[1:] != src_e[:-1]) | (lab_e[1:] != lab_e[:-1])])
+    seg = jnp.cumsum(newrun) - 1                       # (e,) run index
+    segsum = jnp.zeros((e,), jnp.float32).at[seg].add(ws)
+    aff_run = segsum[seg]                              # per edge: run's sum
+    # random tie-break, consistent within a run
+    noise = jax.random.uniform(key, (e,), jnp.float32, 0.0, _NOISE)
+    noise = jnp.zeros((e,), jnp.float32).at[seg].max(noise)[seg]
+    aff_run = aff_run + noise
+    # size constraint: target must have room (own cluster always allowed)
+    own = lab_e == labels[src_e]
+    room = (sizes[lab_e] + g.vwgt[src_e] <= cap[lab_e]) | own
+    live = g.w[order] > 0                              # padding edges inert
+    aff_eff = jnp.where(room & live, aff_run, _NEG)
+    best = jnp.full((n,), _NEG, jnp.float32).at[src_e].max(aff_eff)
+    is_best = aff_eff >= best[src_e] - 1e-9
+    cand = jnp.where(is_best, lab_e, n + 1)
+    best_lab = jnp.full((n,), n + 1, jnp.int32).at[src_e].min(cand)
+    own_best = jnp.zeros((n,), jnp.float32).at[src_e].max(
+        jnp.where(own & live, aff_run, 0.0))
+    return best_lab, best, own_best
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def _cluster_lp_jit(g: CooGraph, labels0: jax.Array, cap: jax.Array,
+                    key: jax.Array, iters: int):
+    n = g.n_pad
+    vw = g.vwgt
+
+    def body(carry, key_r):
+        labels, parity = carry
+        sizes = jnp.zeros((n,), jnp.float32).at[labels].add(vw)
+        k1, _ = jax.random.split(key_r)
+        best_lab, best_aff, own_aff = _segment_affinity(g, labels, sizes,
+                                                        cap, k1)
+        improve = (best_aff > own_aff + _GAIN_EPS) & (best_lab < n)
+        node_par = (jnp.arange(n) + parity) % 2 == 0
+        want = improve & node_par
+        proposal = jnp.where(want, best_lab, labels).astype(labels.dtype)
+        pri = jnp.where(want, best_aff - own_aff, _NEG)
+        new_labels = capped_accept(labels, proposal, vw, sizes, cap, pri)
+        moved = jnp.sum((new_labels != labels).astype(jnp.int32))
+        return (new_labels, parity + 1), moved
+
+    keys = jax.random.split(key, iters)
+    (labels, _), moved = jax.lax.scan(body, (labels0, jnp.int32(0)), keys)
+    return labels, moved
+
+
+def size_constrained_lp(g: Graph, max_cluster_weight: float,
+                        iters: int = 10, seed: int = 0,
+                        coo: Optional[CooGraph] = None) -> np.ndarray:
+    """The ``label_propagation`` program: returns a clustering (host ints)."""
+    coo = coo if coo is not None else to_coo(g)
+    n_pad = coo.n_pad
+    labels0 = jnp.arange(n_pad, dtype=jnp.int32)
+    cap = jnp.full((n_pad,), float(max_cluster_weight), jnp.float32)
+    labels, _ = _cluster_lp_jit(coo, labels0, cap, jax.random.PRNGKey(seed),
+                                iters)
+    return np.asarray(labels)[:g.n]

@@ -1,0 +1,311 @@
+"""Uncoarsening refinement (paper §2.1).
+
+Three refiners, mirroring KaFFPa's arsenal under the batch-synchronous
+adaptation documented in DESIGN.md §2:
+
+  * ``refine_kway``      — round-based k-way gain refinement (the FM variant:
+    all boundary nodes eligible, best-gain moves, balance-capped, undo to the
+    best feasible cut seen).
+  * ``multi_try_refine`` — the *multi-try FM* analogue: search is seeded from
+    a random subset of boundary nodes and expands only through moved nodes'
+    neighbourhoods (localized search escapes local optima, §2.1).
+  * ``flow_refine``      — max-flow min-cut improvement on the boundary band
+    of a block pair (host-side Dinic; the ``strong`` preset applies it on
+    small/coarse levels, where KaHIP also concentrates its flow budget).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import Graph, CooGraph, EllGraph, to_coo, to_ell
+from repro.core import lp as lp_mod
+from repro.core.partition import edge_cut_device, edge_cut
+
+
+# ---------------------------------------------------------------------------
+# batched k-way gain refinement
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "rounds", "allow_zero_gain",
+                                             "force_balance", "localized",
+                                             "use_kernel"))
+def _refine_scan(g: CooGraph, labels0: jax.Array, cap: jax.Array,
+                 key: jax.Array, k: int, rounds: int,
+                 allow_zero_gain: bool, force_balance: bool,
+                 localized: bool, active0: Optional[jax.Array] = None,
+                 ell: Optional[EllGraph] = None, use_kernel: bool = False):
+    n = g.n_pad
+    vw = g.vwgt
+    sizes0 = jnp.zeros((k,), jnp.float32).at[labels0].add(vw)
+    cut0 = edge_cut_device(g, labels0)
+    feas0 = jnp.max(sizes0 - cap) <= 1e-6
+    best_cut0 = jnp.where(feas0, cut0, jnp.inf)
+    act0 = active0 if active0 is not None else jnp.ones((n,), bool)
+    affinity_fn = None
+    if use_kernel and ell is not None:
+        from repro.kernels import ops as kops
+        affinity_fn = lambda _g, lab, kk: kops.lp_affinity(   # noqa: E731
+            ell.nbr, ell.wgt, lab, kk)
+
+    def body(carry, key_r):
+        labels, sizes, active, best_cut, best_labels, parity = carry
+        new_labels, new_sizes = lp_mod.kway_lp_round(
+            g, labels, sizes, cap, key_r, k, parity,
+            active if localized else None, allow_zero_gain, force_balance,
+            affinity_fn=affinity_fn)
+        if localized:
+            moved = new_labels != labels
+            reach = jnp.zeros((n,), bool).at[g.dst].max(
+                moved[g.src] & (g.w > 0))
+            active = active | reach | moved
+        cut = edge_cut_device(g, new_labels)
+        feas = jnp.max(new_sizes - cap) <= 1e-6
+        better = feas & (cut < best_cut)
+        best_cut = jnp.where(better, cut, best_cut)
+        best_labels = jnp.where(better, new_labels, best_labels)
+        return (new_labels, new_sizes, active, best_cut, best_labels,
+                parity + 1), cut
+
+    keys = jax.random.split(key, rounds)
+    (labels, sizes, _, best_cut, best_labels, _), cuts = jax.lax.scan(
+        body, (labels0, sizes0, act0, best_cut0, labels0, jnp.int32(0)), keys)
+    # undo-to-best (KaFFPa semantics): return best feasible if one was seen
+    have_best = jnp.isfinite(best_cut)
+    out = jnp.where(have_best, best_labels, labels)
+    return out, jnp.where(have_best, best_cut, edge_cut_device(g, labels))
+
+
+def _caps_for(g: Graph, k: int, eps: float,
+              fractions: Optional[np.ndarray] = None) -> np.ndarray:
+    total = g.total_vwgt()
+    if fractions is None:
+        lmax = np.ceil(total / k)
+        return np.full(k, (1.0 + eps) * lmax)
+    return (1.0 + eps) * np.asarray(fractions) * total
+
+
+def _pad_labels(part: np.ndarray, n_pad: int) -> jnp.ndarray:
+    lab = np.zeros(n_pad, dtype=np.int32)
+    lab[:len(part)] = part
+    return jnp.asarray(lab)
+
+
+def refine_kway(g: Graph, part: np.ndarray, k: int, eps: float = 0.03,
+                rounds: int = 12, seed: int = 0,
+                fractions: Optional[np.ndarray] = None,
+                coo: Optional[CooGraph] = None,
+                force_balance: bool = False,
+                use_kernel: bool = False) -> np.ndarray:
+    """Polish ``part``; never returns a worse feasible cut (undo-to-best)."""
+    if k <= 1 or g.n == 0:
+        return part
+    coo = coo if coo is not None else to_coo(g)
+    ell = None
+    if use_kernel:
+        ell = to_ell(g, row_tile=coo.n_pad)   # same n_pad as the COO view
+    cap = jnp.asarray(_caps_for(g, k, eps, fractions), jnp.float32)
+    labels0 = _pad_labels(part, coo.n_pad)
+    out, _ = _refine_scan(coo, labels0, cap, jax.random.PRNGKey(seed), k,
+                          rounds, allow_zero_gain=False,
+                          force_balance=force_balance, localized=False,
+                          ell=ell, use_kernel=use_kernel)
+    out = np.asarray(out, dtype=np.int64)[:g.n]
+    # paranoia: keep the better of (in, out) among feasible options
+    if edge_cut(g, out) <= edge_cut(g, part) or force_balance:
+        return out
+    return part
+
+
+def multi_try_refine(g: Graph, part: np.ndarray, k: int, eps: float = 0.03,
+                     tries: int = 3, rounds: int = 8, seed: int = 0,
+                     seed_frac: float = 0.05,
+                     coo: Optional[CooGraph] = None) -> np.ndarray:
+    """Multi-try FM analogue: several localized searches from random boundary
+    seeds; keeps the best feasible result."""
+    if k <= 1 or g.n == 0:
+        return part
+    coo = coo if coo is not None else to_coo(g)
+    cap = jnp.asarray(_caps_for(g, k, eps), jnp.float32)
+    best = np.asarray(part, dtype=np.int64)
+    best_cut = edge_cut(g, best)
+    rng = np.random.default_rng(seed)
+    src = g.edge_sources()
+    for t in range(tries):
+        cur = _pad_labels(best, coo.n_pad)
+        bnd = np.unique(src[best[src] != best[g.adjncy]])
+        if len(bnd) == 0:
+            break
+        nseed = max(1, int(len(bnd) * seed_frac))
+        chosen = rng.choice(bnd, size=nseed, replace=False)
+        active0 = np.zeros(coo.n_pad, dtype=bool)
+        active0[chosen] = True
+        out, _ = _refine_scan(coo, cur, cap,
+                              jax.random.PRNGKey(seed * 997 + t), k, rounds,
+                              allow_zero_gain=True, force_balance=False,
+                              localized=True, active0=jnp.asarray(active0))
+        out = np.asarray(out, dtype=np.int64)[:g.n]
+        c = edge_cut(g, out)
+        if c < best_cut:
+            best, best_cut = out, c
+    return best
+
+
+# ---------------------------------------------------------------------------
+# flow-based refinement (host, 2 blocks, boundary band)
+# ---------------------------------------------------------------------------
+
+def _dinic(nv: int, edges: list, s: int, t: int):
+    """Dinic max-flow. edges: list of [u, v, cap]; returns (flow, S-side set)."""
+    graph = [[] for _ in range(nv)]
+    for (u, v, c) in edges:
+        graph[u].append([v, c, len(graph[v])])
+        graph[v].append([u, 0, len(graph[u]) - 1])
+
+    def bfs():
+        level = [-1] * nv
+        level[s] = 0
+        q = [s]
+        for u in q:
+            for e in graph[u]:
+                if e[1] > 0 and level[e[0]] < 0:
+                    level[e[0]] = level[u] + 1
+                    q.append(e[0])
+        return level if level[t] >= 0 else None
+
+    def dfs(u, f, level, it):
+        if u == t:
+            return f
+        while it[u] < len(graph[u]):
+            e = graph[u][it[u]]
+            if e[1] > 0 and level[e[0]] == level[u] + 1:
+                d = dfs(e[0], min(f, e[1]), level, it)
+                if d > 0:
+                    e[1] -= d
+                    graph[e[0]][e[2]][1] += d
+                    return d
+            it[u] += 1
+        return 0
+
+    flow = 0
+    while True:
+        level = bfs()
+        if level is None:
+            break
+        it = [0] * nv
+        while True:
+            f = dfs(s, float("inf"), level, it)
+            if f == 0:
+                break
+            flow += f
+    # S side of the min cut = reachable in residual
+    seen = [False] * nv
+    seen[s] = True
+    q = [s]
+    for u in q:
+        for e in graph[u]:
+            if e[1] > 0 and not seen[e[0]]:
+                seen[e[0]] = True
+                q.append(e[0])
+    return flow, np.asarray(seen)
+
+
+def flow_refine_pair(g: Graph, part: np.ndarray, a: int, b: int,
+                     eps: float, band_depth: int = 2,
+                     max_band: int = 4000) -> np.ndarray:
+    """Max-flow min-cut improvement between blocks a and b (paper §2.1).
+
+    Grows a band around the a|b boundary sized so that *any* s-t cut inside
+    it keeps both blocks within the balance constraint, then replaces the
+    boundary with the min cut.
+    """
+    part = np.asarray(part, dtype=np.int64)
+    k = int(part.max()) + 1
+    total = g.total_vwgt()
+    lmax = (1.0 + eps) * np.ceil(total / k)
+    in_pair = (part == a) | (part == b)
+    src = g.edge_sources()
+    # boundary nodes of the pair
+    bmask = np.zeros(g.n, dtype=bool)
+    cutedges = in_pair[src] & in_pair[g.adjncy] & (part[src] != part[g.adjncy])
+    bmask[src[cutedges]] = True
+    if not bmask.any():
+        return part
+    wa = int(g.vwgt[part == a].sum())
+    wb = int(g.vwgt[part == b].sum())
+    # budget: how much weight may cross either way
+    slack_a = lmax - wa      # room in a
+    slack_b = lmax - wb
+    band = bmask.copy()
+    # BFS out `band_depth` steps inside each block, capped by slack so every
+    # cut in the band is feasible (moving whole band-side stays within lmax)
+    for side, slack in ((a, slack_b), (b, slack_a)):
+        depth_mask = bmask & (part == side)
+        wsum = int(g.vwgt[depth_mask].sum())
+        cur = depth_mask
+        for _ in range(band_depth):
+            nxt = np.zeros(g.n, dtype=bool)
+            hits = cur[src] & (part[g.adjncy] == side) & ~band[g.adjncy] & ~cur[g.adjncy]
+            nxt[g.adjncy[hits]] = True
+            add_ids = np.flatnonzero(nxt)
+            order = np.argsort(g.vwgt[add_ids])  # cheap nodes first
+            for i in add_ids[order]:
+                if wsum + int(g.vwgt[i]) > slack or band.sum() > max_band:
+                    break
+                band[i] = True
+                wsum += int(g.vwgt[i])
+            cur = nxt & band
+            if not cur.any():
+                break
+    ids = np.flatnonzero(band)
+    if len(ids) > max_band:
+        return part
+    remap = -np.ones(g.n, dtype=np.int64)
+    remap[ids] = np.arange(len(ids))
+    nv = len(ids) + 2
+    S, T = len(ids), len(ids) + 1
+    edges = []
+    inside = band[src] & band[g.adjncy]
+    fwd = inside & (src < g.adjncy)
+    for e in np.flatnonzero(fwd):
+        u, v, w = remap[src[e]], remap[g.adjncy[e]], int(g.adjwgt[e])
+        edges.append([u, v, w])
+        edges.append([v, u, w])
+    big = int(g.adjwgt.sum()) + 1
+    # attach S to band nodes adjacent to non-band a-side, T to b-side
+    touch_a = band[src] & ~band[g.adjncy] & (part[g.adjncy] == a)
+    touch_b = band[src] & ~band[g.adjncy] & (part[g.adjncy] == b)
+    for u in np.unique(src[touch_a]):
+        edges.append([S, remap[u], big])
+    for u in np.unique(src[touch_b]):
+        edges.append([remap[u], T, big])
+    flow, sside = _dinic(nv, edges, S, T)
+    new_part = part.copy()
+    new_part[ids] = np.where(sside[:len(ids)], a, b)
+    # accept only if feasible and not worse
+    bw = np.zeros(k, dtype=np.int64)
+    np.add.at(bw, new_part, g.vwgt)
+    if bw.max() > lmax + 1e-9:
+        return part
+    if edge_cut(g, new_part) <= edge_cut(g, part):
+        return new_part
+    return part
+
+
+def flow_refine_all_pairs(g: Graph, part: np.ndarray, k: int, eps: float,
+                          max_n: int = 20000, seed: int = 0) -> np.ndarray:
+    """Apply pairwise flow refinement over all adjacent block pairs."""
+    if g.n > max_n:
+        return part
+    part = np.asarray(part, dtype=np.int64)
+    src = g.edge_sources()
+    for a in range(k):
+        for b in range(a + 1, k):
+            touching = np.any((part[src] == a) & (part[g.adjncy] == b))
+            if touching:
+                part = flow_refine_pair(g, part, a, b, eps)
+    return part

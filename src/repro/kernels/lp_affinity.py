@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: block-affinity histogram — the hot loop of every
+LP-based phase (coarsening clustering, LP refinement, ParHIP rounds).
+
+Computes  aff[v, b] = Σ_j  wgt[v, j] · [nbr_lab[v, j] == b]
+i.e. ``A_ELL @ onehot(labels)`` — an (n × dmax × k) contraction.
+
+TPU adaptation (DESIGN.md §2/§6): the irregular CSR gather (labels of
+neighbours) is done by XLA outside the kernel (memory-bound, gather engine);
+the FLOP-dense one-hot contraction runs here on 128-row tiles resident in
+VMEM, accumulating a (128, k_tile) affinity tile on the VPU.  dmax is walked
+in chunks of 8 so the expanded (128, 8, 128) compare cube stays ~0.5 MB.
+
+Grid: (n_pad/BN, k_pad/BK); BlockSpecs pin rows to tiles, labels/weights
+blocks are re-streamed per k-tile (k_pad/BK is almost always 1 for
+partitioning workloads: k ≤ 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 128          # rows per tile (sublane-aligned)
+BK = 128          # blocks per tile (lane-aligned)
+DC = 8            # dmax chunk walked per inner step
+
+
+def _affinity_kernel(nbr_lab_ref, wgt_ref, out_ref):
+    """One (BN rows × BK labels) output tile."""
+    j = pl.program_id(1)
+    lab = nbr_lab_ref[...]          # (BN, dmax) int32
+    wgt = wgt_ref[...]              # (BN, dmax) f32
+    dmax = lab.shape[1]
+    base = j * BK
+    kids = base + jax.lax.broadcasted_iota(jnp.int32, (1, 1, BK), 2)
+
+    def step(d, acc):
+        lab_c = jax.lax.dynamic_slice(lab, (0, d * DC), (BN, DC))
+        wgt_c = jax.lax.dynamic_slice(wgt, (0, d * DC), (BN, DC))
+        hit = (lab_c[:, :, None] == kids).astype(jnp.float32)   # (BN, DC, BK)
+        return acc + jnp.sum(hit * wgt_c[:, :, None], axis=1)
+
+    acc = jnp.zeros((BN, BK), jnp.float32)
+    acc = jax.lax.fori_loop(0, dmax // DC, step, acc)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "interpret"))
+def affinity_pallas(nbr_lab: jax.Array, wgt: jax.Array, k_pad: int,
+                    interpret: bool = False) -> jax.Array:
+    """(n_pad, dmax) neighbour labels/weights → (n_pad, k_pad) affinities.
+
+    Requires n_pad % BN == 0, k_pad % BK == 0, dmax % DC == 0.
+    """
+    n_pad, dmax = nbr_lab.shape
+    assert n_pad % BN == 0 and k_pad % BK == 0 and dmax % DC == 0, (
+        n_pad, k_pad, dmax)
+    grid = (n_pad // BN, k_pad // BK)
+    return pl.pallas_call(
+        _affinity_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BN, dmax), lambda i, j: (i, 0)),
+            pl.BlockSpec((BN, dmax), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BN, BK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, k_pad), jnp.float32),
+        interpret=interpret,
+    )(nbr_lab, wgt)

@@ -1,0 +1,63 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they run in
+``interpret=True`` mode — the kernel body executes in Python with the same
+block decomposition, validating tiling and semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import lp_affinity as _lpk
+from repro.kernels import ssd_scan as _ssdk
+from repro.kernels import ref as _ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def lp_affinity(nbr: jax.Array, wgt: jax.Array, labels: jax.Array,
+                k: int, use_pallas: bool = True) -> jax.Array:
+    """ELL graph + labels → (n_pad, k) block affinities.
+
+    The neighbour-label gather runs in XLA (memory-bound); the one-hot
+    contraction runs in the Pallas kernel (compute-bound).  Padded ELL slots
+    carry wgt == 0, so their (valid) gathered labels contribute nothing.
+    """
+    nbr_lab = labels[nbr]                         # XLA gather
+    if not use_pallas:
+        return _ref.affinity_ref(nbr_lab, wgt, k)
+    n_pad, dmax = nbr.shape
+    k_pad = _round_up(k, _lpk.BK)
+    d_pad = _round_up(dmax, _lpk.DC)
+    if d_pad != dmax:
+        pad = d_pad - dmax
+        nbr_lab = jnp.pad(nbr_lab, ((0, 0), (0, pad)), constant_values=0)
+        wgt = jnp.pad(wgt, ((0, 0), (0, pad)))
+    aff = _lpk.affinity_pallas(nbr_lab, wgt, k_pad, interpret=_interpret())
+    return aff[:, :k]
+
+
+def ssd_scan(x: jax.Array, logdecay: jax.Array, b: jax.Array, c: jax.Array,
+             chunk: int = 128, use_pallas: bool = True) -> jax.Array:
+    """Mamba2 SSD scan: (BH, L, P) × (BH, L) × (BH, L, N)² → (BH, L, P)."""
+    if not use_pallas:
+        return _ref.ssd_scan_ref(x, logdecay, b, c)
+    l = x.shape[1]
+    if l % chunk != 0:
+        pad = _round_up(l, chunk) - l
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        logdecay = jnp.pad(logdecay, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    y = _ssdk.ssd_scan_pallas(x, logdecay, b, c, chunk=chunk,
+                              interpret=_interpret())
+    return y[:, :l]

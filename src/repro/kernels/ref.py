@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def affinity_ref(nbr_lab: jax.Array, wgt: jax.Array, k_pad: int) -> jax.Array:
+    """aff[v, b] = Σ_j wgt[v, j] · [nbr_lab[v, j] == b]  — (n_pad, k_pad)."""
+    hit = jax.nn.one_hot(nbr_lab, k_pad, dtype=jnp.float32)   # (n, d, k)
+    return jnp.einsum("nd,ndk->nk", wgt.astype(jnp.float32), hit)
+
+
+def ssd_scan_ref(x: jax.Array, logdecay: jax.Array, b: jax.Array,
+                 c: jax.Array) -> jax.Array:
+    """Exact sequential SSD recurrence.
+
+    h_t = exp(logdecay_t) · h_{t-1} + b_t ⊗ x_t ;  y_t = h_tᵀ c_t
+    x: (BH, L, P), logdecay: (BH, L), b/c: (BH, L, N) → y: (BH, L, P)
+    """
+    bh, l, p = x.shape
+    n = b.shape[-1]
+
+    def step(h, inp):
+        xt, ldt, bt, ct = inp
+        h = jnp.exp(ldt)[:, None, None] * h + bt[:, :, None] * xt[:, None, :]
+        y = jnp.einsum("znp,zn->zp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((bh, n, p), jnp.float32)
+    xs = (jnp.swapaxes(x, 0, 1), jnp.swapaxes(logdecay, 0, 1),
+          jnp.swapaxes(b, 0, 1), jnp.swapaxes(c, 0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.swapaxes(ys, 0, 1)

@@ -1,0 +1,460 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  jit(step).lower(**ShapeDtypeStruct inputs).compile()
+on the 16×16 single-pod mesh and the 2×16×16 multi-pod mesh, printing
+memory_analysis() (it fits) and cost_analysis() (FLOPs/bytes for §Roofline),
+plus a collective-bytes table parsed from the compiled HLO.
+
+Usage:
+  python -m repro.launch.dryrun --arch minicpm_2b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out results/dryrun]
+
+Each cell writes ``<out>/<arch>__<shape>__<mesh>.json`` and is skipped if the
+file already exists (resumable).  ``--subproc`` (default with --all) runs
+each cell in a fresh interpreter so compilations can't accumulate RSS.
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ARCH_IDS, SHAPES, cell_is_applicable,
+                                get_config)
+from repro.launch.mesh import make_production_mesh
+
+PARAM_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+
+# hardware constants (assignment): TPU v5e-class chip
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+
+def _spec_tree(tree, mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def build_cell(arch_id: str, shape_name: str, extra: dict | None = None,
+               cfg=None):
+    """Returns (fn, args ShapeDtype pytree, in_spec pytree builder)."""
+    from repro.models import transformer as T
+    from repro.models import shardings as SH
+    from repro.train.train_step import make_train_step, init_opt_state
+    from repro.train.optimizer import OptConfig
+    from repro.serve.serve_step import prefill_step, decode_step
+
+    cfg = cfg if cfg is not None else get_config(arch_id)
+    shp = SHAPES[shape_name]
+    kind = shp["kind"]
+    b, s = shp["global_batch"], shp["seq_len"]
+    extra = extra or {}
+    remat = extra.get("remat", "full")
+
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda: T.init_params(cfg, key, PARAM_DTYPE))
+
+    def batch_struct():
+        n_text = s - cfg.n_prefix_embeds
+        out = {"tokens": jax.ShapeDtypeStruct((b, n_text + 1), jnp.int32)}
+        if cfg.n_prefix_embeds:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix_embeds, cfg.d_model), PARAM_DTYPE)
+        if cfg.enc_layers:
+            out["enc_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_positions, cfg.d_model), PARAM_DTYPE)
+        return out
+
+    if kind == "train":
+        opt_shape = jax.eval_shape(
+            lambda: init_opt_state(
+                jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype),
+                             params_shape)))
+        step = make_train_step(cfg, OptConfig(), remat=remat,
+                               microbatches=int(extra.get("microbatch", 1)))
+        args = (params_shape, opt_shape, batch_struct())
+
+        def in_specs(mesh):
+            axes = mesh.axis_names
+            pspec = SH.param_specs(params_shape, axes)
+            ospec = {"mu": pspec, "nu": pspec, "step": P()}
+            bax = SH.batch_axes_for(mesh, b)
+            bspec = {"tokens": P(bax, None)}
+            if cfg.n_prefix_embeds:
+                bspec["prefix_embeds"] = P(bax, None, None)
+            if cfg.enc_layers:
+                bspec["enc_frames"] = P(bax, None, None)
+            return (pspec, ospec, bspec)
+
+        def out_specs(mesh):
+            axes = mesh.axis_names
+            pspec = SH.param_specs(params_shape, axes)
+            ospec = {"mu": pspec, "nu": pspec, "step": P()}
+            return (pspec, ospec, None)
+        return cfg, step, args, in_specs, out_specs
+
+    caches_shape = jax.eval_shape(
+        lambda: T.init_caches(cfg, b, s, CACHE_DTYPE))
+
+    if kind == "prefill":
+        extra_names = []
+        extras = []
+        if cfg.n_prefix_embeds:
+            extra_names.append("prefix_embeds")
+            extras.append(jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix_embeds, cfg.d_model), PARAM_DTYPE))
+        if cfg.enc_layers:
+            extra_names.append("enc_frames")
+            extras.append(jax.ShapeDtypeStruct(
+                (b, cfg.enc_positions, cfg.d_model), PARAM_DTYPE))
+
+        def step(params, tokens, caches, *rest):
+            return prefill_step(params, cfg, tokens, caches,
+                                **dict(zip(extra_names, rest)))
+        n_text = s - cfg.n_prefix_embeds
+        args = [params_shape,
+                jax.ShapeDtypeStruct((b, n_text), jnp.int32), caches_shape,
+                *extras]
+
+        def in_specs(mesh):
+            axes = mesh.axis_names
+            bsp = SH.batch_axes_for(mesh, b)
+            sp = [SH.param_specs(params_shape, axes), P(bsp, None),
+                  SH.cache_specs(caches_shape, mesh, b)]
+            sp += [P(bsp, None, None)] * len(extras)
+            return tuple(sp)
+
+        def out_specs(mesh):
+            return (None, SH.cache_specs(caches_shape, mesh, b))
+        return cfg, step, args, in_specs, out_specs
+
+    # decode
+    def step(params, last, caches, pos):
+        return decode_step(params, cfg, last, caches, pos)
+    args = [params_shape, jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            caches_shape, jax.ShapeDtypeStruct((), jnp.int32)]
+
+    def in_specs(mesh):
+        axes = mesh.axis_names
+        bsp = SH.batch_axes_for(mesh, b)
+        return (SH.param_specs(params_shape, axes), P(bsp, None),
+                SH.cache_specs(caches_shape, mesh, b), P())
+
+    def out_specs(mesh):
+        return (None, SH.cache_specs(caches_shape, mesh, b))
+    return cfg, step, args, in_specs, out_specs
+
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Sum operand bytes per collective kind (+ per replica-group size)."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    by_group: dict = {}
+    n_ops = 0
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s+(?:\([^)]*\)|\S+)\s+(all-gather|all-reduce|"
+                      r"reduce-scatter|all-to-all|collective-permute)"
+                      r"(?:-start)?\(", stripped)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done(" in stripped:
+            continue
+        shapes = list(_SHAPE_RE.finditer(stripped.split("=", 1)[0]))
+        if not shapes:
+            shapes = list(_SHAPE_RE.finditer(stripped))
+            shapes = shapes[:1]
+        result_bytes = sum(_shape_bytes(s) for s in shapes)
+        # replica group size
+        gsize = None
+        gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", stripped)
+        if gm:
+            gsize = int(gm.group(2))
+        else:
+            gm2 = re.search(r"replica_groups=\{\{([0-9, ]+)\}", stripped)
+            if gm2:
+                gsize = len(gm2.group(1).split(","))
+        gsize = gsize or 1
+        # operand bytes: all-gather result is gathered (operand = out/g);
+        # reduce-scatter operand = out*g; others in == out
+        if kind == "all-gather":
+            op_bytes = result_bytes / max(gsize, 1)
+        elif kind == "reduce-scatter":
+            op_bytes = result_bytes * max(gsize, 1)
+        else:
+            op_bytes = result_bytes
+        out[kind] += op_bytes
+        key = f"{kind}:g{gsize}"
+        by_group[key] = by_group.get(key, 0.0) + op_bytes
+        n_ops += 1
+    out["by_group"] = by_group
+    out["n_ops"] = n_ops
+    out["total_operand_bytes"] = float(sum(out[k] for k in _COLLECTIVES))
+    return out
+
+
+def _lower_compile(cfg, arch_id, shape_name, mesh, extra):
+    """lower+compile one variant; returns (compiled, lowered)."""
+    from repro.models import shardings as SH
+    cfg2, step, args, in_specs_fn, out_specs_fn = build_cell(
+        arch_id, shape_name, extra, cfg=cfg)
+    kw = {}
+    if isinstance(step, tuple):
+        step, kw = step
+    in_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), in_specs_fn(mesh),
+                         is_leaf=lambda x: isinstance(x, P))
+    with SH.use_mesh(mesh):
+        f = jax.jit(step, in_shardings=in_sh)
+        lowered = f.lower(*args, **kw)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _cost_of(compiled):
+    cost = compiled.cost_analysis()
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll["total_operand_bytes"],
+            "coll_by_group": coll["by_group"]}
+
+
+def corrected_costs(arch_id, shape_name, mesh, extra):
+    """XLA cost_analysis counts while-loop bodies ONCE (verified) — lower
+    1-unit and 2-unit depth variants and extrapolate:
+        total = F1 + (trips - 1)·(F2 - F1)
+    applied to flops, bytes, and collective bytes.  The attention KV scan
+    and the hybrid inner scan are fully unrolled in the HLO, so the layer
+    scan is the only loop left to correct (plus whisper's encoder scan,
+    solved with a third variant)."""
+    import dataclasses
+    # variants must not wrap the work in the (while-loop) microbatch scan —
+    # same total tokens at microbatch=1 gives loop-free accounting; the
+    # accumulate-buffer traffic (MB × params f32 add) is added analytically
+    extra = dict(extra or {})
+    mb = int(extra.pop("microbatch", 1))
+    cfg = get_config(arch_id)
+    unit = cfg.attn_every if cfg.family == "hybrid" else 1
+    trips = cfg.n_layers // unit
+    v1 = dataclasses.replace(cfg, n_layers=unit,
+                             enc_layers=min(cfg.enc_layers, 1))
+    v2 = dataclasses.replace(cfg, n_layers=2 * unit,
+                             enc_layers=min(cfg.enc_layers, 1))
+    from repro.models.transformer import layer_unroll
+    with layer_unroll(4):
+        f1 = _cost_of(_lower_compile(v1, arch_id, shape_name, mesh, extra))
+        f2 = _cost_of(_lower_compile(v2, arch_id, shape_name, mesh, extra))
+
+    def combine(key):
+        body = f2[key] - f1[key]
+        return f1[key] + (trips - 1) * body
+
+    out = {k: combine(k) for k in ("flops", "bytes", "coll")}
+    if mb > 1 and SHAPES[shape_name]["kind"] == "train":
+        # grad-accumulation adds MB read-modify-write passes over f32 grads
+        import math
+        n_chips_est = 1
+        for v in mesh.shape.values():
+            n_chips_est *= v
+        accum = 3.0 * 4.0 * cfg.param_count() / n_chips_est
+        out["bytes"] += mb * accum
+    # collective per-group table, extrapolated the same way
+    groups = set(f1["coll_by_group"]) | set(f2["coll_by_group"])
+    out["coll_by_group"] = {
+        g: f1["coll_by_group"].get(g, 0.0)
+        + (trips - 1) * (f2["coll_by_group"].get(g, 0.0)
+                         - f1["coll_by_group"].get(g, 0.0))
+        for g in groups}
+    if cfg.enc_layers > 1:
+        v3 = dataclasses.replace(cfg, n_layers=unit, enc_layers=2)
+        with layer_unroll(4):
+            f3 = _cost_of(_lower_compile(v3, arch_id, shape_name, mesh,
+                                         extra))
+        for k in ("flops", "bytes", "coll"):
+            out[k] += (cfg.enc_layers - 1) * (f3[k] - f1[k])
+    return out
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             out_dir: str, extra: dict | None = None) -> dict:
+    cfg = get_config(arch_id)
+    ok, why = cell_is_applicable(cfg, shape_name)
+    tag = f"{arch_id}__{shape_name}__{mesh_kind}"
+    if extra and extra.get("tag"):
+        tag += "__" + extra["tag"]
+    path = os.path.join(out_dir, tag + ".json")
+    if not ok:
+        rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+               "skipped": why}
+        os.makedirs(out_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[skip] {tag}: {why}")
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    cfg, step, args, in_specs_fn, out_specs_fn = build_cell(
+        arch_id, shape_name, extra)
+    kw = {}
+    if isinstance(step, tuple):
+        step, kw = step
+    in_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), in_specs_fn(mesh),
+                         is_leaf=lambda x: isinstance(x, P))
+    out_sp = out_specs_fn(mesh)
+    out_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), out_sp,
+                          is_leaf=lambda x: isinstance(x, P)) \
+        if out_sp is not None else None
+    from repro.models import shardings as SH
+    jit_kwargs = dict(in_shardings=in_sh)
+    if (extra or {}).get("donate"):
+        # alias state buffers in/out: params+opt for train, caches for serve
+        shp_kind = SHAPES[shape_name]["kind"]
+        jit_kwargs["donate_argnums"] = (0, 1) if shp_kind == "train" else (2,)
+    with SH.use_mesh(mesh):
+        f = jax.jit(step, **jit_kwargs)
+        lowered = f.lower(*args, **kw)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    corr = corrected_costs(arch_id, shape_name, mesh, extra)
+    shp = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+    if shp["kind"] == "train":
+        tokens = shp["global_batch"] * shp["seq_len"]
+        model_flops = 6.0 * n_active * tokens
+    elif shp["kind"] == "prefill":
+        tokens = shp["global_batch"] * shp["seq_len"]
+        model_flops = 2.0 * n_active * tokens
+    else:
+        tokens = shp["global_batch"]
+        model_flops = 2.0 * n_active * tokens
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+        "n_chips": n_chips,
+        "kind": shp["kind"],
+        "extra": extra or {},
+        "params_total": n_total, "params_active": n_active,
+        "tokens_per_step": tokens,
+        "model_flops": model_flops,
+        "hlo_flops_raw": float(cost.get("flops", -1.0)),
+        "hlo_bytes_raw": float(cost.get("bytes accessed", -1.0)),
+        "hlo_flops": corr["flops"],
+        "hlo_bytes": corr["bytes"],
+        "collective_bytes": corr["coll"],
+        "collective_by_group": corr["coll_by_group"],
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+            "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", -1),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", -1),
+        },
+        "collectives": coll,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[ok] {tag}: flops={rec['hlo_flops']:.3e} "
+          f"bytes={rec['hlo_bytes']:.3e} "
+          f"coll={rec['collective_bytes']:.3e}B "
+          f"model/hlo={rec['model_flops']/max(rec['hlo_flops']*rec['n_chips'],1):.2f} "
+          f"({rec['lower_s']:.0f}s lower, {rec['compile_s']:.0f}s compile)")
+    print("  memory:", rec["memory_analysis"])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--inline", action="store_true",
+                    help="run cells in-process (default: subprocess per cell)")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--donate", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    extra = {"remat": args.remat}
+    if args.microbatch > 1:
+        extra["microbatch"] = args.microbatch
+    if args.donate:
+        extra["donate"] = True
+    if args.tag:
+        extra["tag"] = args.tag
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if not args.all:
+        assert args.arch and args.shape
+        for mk in meshes:
+            run_cell(args.arch, args.shape, mk, args.out, extra)
+        return
+    failures = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mk in meshes:
+                tag = f"{arch}__{shape}__{mk}"
+                if args.tag:
+                    tag += "__" + args.tag
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[cached] {tag}")
+                    continue
+                if args.inline:
+                    run_cell(arch, shape, mk, args.out, extra)
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mk,
+                       "--out", args.out, "--remat", args.remat]
+                if args.tag:
+                    cmd += ["--tag", args.tag]
+                r = subprocess.run(cmd)
+                if r.returncode != 0:
+                    failures.append(tag)
+                    print(f"[FAIL] {tag}")
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("ALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""GQA attention with every flavour the assigned archs need: RoPE, sliding
+windows (gemma2 local layers), logit softcapping, cross-attention (whisper),
+and a KV-cache decode path."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_rope, causal_mask, normal, rope_freqs,
+                                 softcap)
+
+
+def init_attn(key, cfg, dtype, d_model=None):
+    d = d_model or cfg.d_model
+    hd = cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 0.02
+    return {
+        "wq": normal(k1, (d, cfg.n_heads * hd), s, dtype),
+        "wk": normal(k2, (d, cfg.n_kv_heads * hd), s, dtype),
+        "wv": normal(k3, (d, cfg.n_kv_heads * hd), s, dtype),
+        "wo": normal(k4, (cfg.n_heads * hd, d), s, dtype),
+    }
+
+
+def _sdpa(q, k, v, mask, cap, scale):
+    """q: (B,Sq,H,hd) k/v: (B,Skv,KV,hd) with GQA broadcast."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, sq, kvh, rep, hd)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32) * scale
+    logits = softcap(logits, cap)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v)
+    return out.reshape(b, sq, h, hd)
+
+
+ONLINE_THRESHOLD = 2048      # use online softmax when Sq·Skv exceeds this²
+KV_BLOCK = 1024
+
+
+def _sdpa_online(q, k, v, cap, scale, *, q_offset, window, is_causal):
+    """Flash-style online-softmax attention: scan over KV blocks carrying
+    (running max, normalizer, weighted accumulator).  Peak live buffer is
+    O(Sq · KV_BLOCK) instead of O(Sq · Skv) — this is what keeps the 32k
+    prefill and 500k-cache cells memory-sane (DESIGN.md §5)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    kvh = k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, sq, kvh, rep, hd)
+    # block size adapts so the scan fully unrolls at ≤ 8 steps: the compiled
+    # HLO then carries every step (XLA cost_analysis counts loop bodies once)
+    kv_block = max(KV_BLOCK, ((skv // 8) + 127) // 128 * 128)
+    nb = -(-skv // kv_block)
+    unroll = nb if nb <= 8 else 1
+    pad = nb * kv_block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nb, kv_block, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, kv_block, kvh, hd).transpose(1, 0, 2, 3, 4)
+    qidx = q_offset + jnp.arange(sq)[:, None]
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, bi = blk
+        kidx = bi * kv_block + jnp.arange(kv_block)[None, :]
+        msk = kidx < skv
+        if is_causal:
+            msk = msk & (kidx <= qidx)
+        if window is not None:
+            msk = msk & (kidx > qidx - window)
+        s_blk = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kblk)
+        s_blk = s_blk.astype(jnp.float32) * scale
+        s_blk = softcap(s_blk, cap)
+        s_blk = jnp.where(msk[None, None, None], s_blk, -1e30)
+        m_new = jnp.maximum(m, s_blk.max(-1))
+        p = jnp.exp(s_blk - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(vblk.dtype), vblk)
+        acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, rep, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kvh, rep, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, rep, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nb)), unroll=unroll)
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(v.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+
+
+def attention(params, x, cfg, positions, *, window=None, is_causal=True,
+              cache=None, cache_pos=None, kv_override=None):
+    """Returns (out, new_cache).
+
+    cache: dict(k=(B,Smax,KV,hd), v=…) — decode writes at ``cache_pos``.
+    kv_override: (k, v) precomputed (cross-attention).
+    """
+    b, s, d = x.shape
+    hd = cfg.hd
+    q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, hd)
+    if kv_override is None:
+        k = (x @ params["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (x @ params["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        cos, sin = rope_freqs(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    else:
+        k, v = kv_override
+    new_cache = None
+    q_offset = 0
+    causal = is_causal and kv_override is None
+    if cache is not None and kv_override is None:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, cache_pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        q_offset = cache_pos
+    scale = 1.0 / jnp.sqrt(hd)
+    if s * k.shape[1] > ONLINE_THRESHOLD ** 2:
+        out = _sdpa_online(q, k, v, cfg.attn_logit_softcap, scale,
+                           q_offset=q_offset, window=window,
+                           is_causal=causal)
+    else:
+        kidx = jnp.arange(k.shape[1])[None, :]
+        qidx = q_offset + jnp.arange(s)[:, None]
+        mask = (kidx <= qidx) if causal else jnp.ones((s, k.shape[1]), bool)
+        if window is not None and causal:
+            mask = mask & (kidx > qidx - window)
+        out = _sdpa(q, k, v, mask, cfg.attn_logit_softcap, scale)
+    return out.reshape(b, s, -1) @ params["wo"], new_cache
+
+
+def init_cross_kv(params, enc_out, cfg):
+    """Precompute cross-attention K/V from encoder output (whisper)."""
+    b, se, d = enc_out.shape
+    k = (enc_out @ params["wk"]).reshape(b, se, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out @ params["wv"]).reshape(b, se, cfg.n_kv_heads, cfg.hd)
+    return k, v

@@ -1,0 +1,62 @@
+"""Shared neural net layers (pure functions over param pytrees; no flax).
+
+Sharding is expressed through ``logical`` axis names resolved against the
+mesh by models/shardings.py; activations use with_sharding_constraint at the
+few places that matter (post-projection residual stream).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def rope_freqs(positions: jax.Array, dim: int, theta: float) -> tuple:
+    """positions: (...,) int32 → cos/sin of shape (..., dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, dim); cos/sin: (..., seq, dim//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def causal_mask(q_len: int, kv_len: int, window: Optional[int] = None,
+                q_offset: int = 0) -> jax.Array:
+    """(q_len, kv_len) bool mask; True = attend."""
+    q = jnp.arange(q_len)[:, None] + q_offset
+    k = jnp.arange(kv_len)[None, :]
+    m = k <= q
+    if window is not None:
+        m = m & (k > q - window)
+    return m

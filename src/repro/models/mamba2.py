@@ -1,0 +1,208 @@
+"""Mamba2 mixer (zamba2's backbone): SSD state-space recurrence.
+
+Three interchangeable scan engines (tests assert equivalence):
+  * ``ssd_chunked``     — parallel chunked formulation in jnp: all intra-chunk
+    terms as batched matmuls + one associative_scan over chunk summaries.
+    This is what the train/dry-run graphs use (MXU-dense, FLOPs-faithful).
+  * kernels.ops.ssd_scan — the Pallas TPU kernel (same chunk math, VMEM-tiled).
+  * kernels.ref.ssd_scan_ref — exact sequential oracle.
+
+Decode keeps an (nheads, N, P) state + a conv tail; one step is O(1) in
+sequence length — this is what makes zamba2 eligible for long_500k.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal, rmsnorm
+
+
+def ssd_chunked_grouped(x, logdecay, b, c, chunk: int = 128):
+    """Parallel SSD with head-shared B/C (Mamba2's single group): avoids the
+    (B,H,L,N) broadcast entirely (EXPERIMENTS.md §Perf, zamba2 iteration).
+
+    x (B,H,L,P), logdecay (B,H,L), b/c (B,L,N) → (B,H,L,P).
+    """
+    bsz, h, l, p = x.shape
+    n = b.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        logdecay = jnp.pad(logdecay, ((0, 0), (0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    lc = x.shape[2]
+    nc = lc // chunk
+    xr = x.reshape(bsz, h, nc, chunk, p)
+    ldr = logdecay.reshape(bsz, h, nc, chunk)
+    br = b.reshape(bsz, nc, chunk, n)
+    cr = c.reshape(bsz, nc, chunk, n)
+    s = jnp.cumsum(ldr, axis=-1)                       # (B,H,NC,Q)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    diff = jnp.where(tri[None, None, None],
+                     s[..., :, None] - s[..., None, :], -jnp.inf)
+    lmat = jnp.exp(diff)                               # (B,H,NC,Q,Q)
+    cb = jnp.einsum("zctn,zcun->zctu", cr, br)         # shared across heads
+    y_intra = jnp.einsum("zctu,zhctu,zhcup->zhctp", cb, lmat, xr)
+    total = s[..., -1:]
+    wlast = jnp.exp(total - s)                         # (B,H,NC,Q)
+    summ = jnp.einsum("zcun,zhcu,zhcup->zhcnp", br, wlast, xr)
+    decay_c = jnp.exp(total[..., 0])                   # (B,H,NC)
+
+    def op(a, bb):
+        (da, ha) = a
+        (db, hb) = bb
+        return (da * db, db[..., None, None] * ha + hb)
+    ds, hs = jax.lax.associative_scan(op, (decay_c, summ), axis=2)
+    h_prev = jnp.concatenate([jnp.zeros_like(hs[:, :, :1]), hs[:, :, :-1]],
+                             axis=2)
+    y_inter = jnp.einsum("zctn,zhct,zhcnp->zhctp", cr, jnp.exp(s), h_prev)
+    y = (y_intra + y_inter).reshape(bsz, h, lc, p)
+    return y[:, :, :l] if pad else y
+
+
+def ssd_chunked(x, logdecay, b, c, chunk: int = 128):
+    """Parallel SSD: x (BH,L,P), logdecay (BH,L), b/c (BH,L,N) → (BH,L,P)."""
+    bh, l, p = x.shape
+    n = b.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        logdecay = jnp.pad(logdecay, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    lc = x.shape[1]
+    nc = lc // chunk
+    xr = x.reshape(bh, nc, chunk, p)
+    ldr = logdecay.reshape(bh, nc, chunk)
+    br = b.reshape(bh, nc, chunk, n)
+    cr = c.reshape(bh, nc, chunk, n)
+    s = jnp.cumsum(ldr, axis=-1)                        # (BH,NC,Q)
+    # intra-chunk: Y = ((C Bᵀ) ⊙ L) X with L[t,u] = exp(s_t - s_u)·[u ≤ t]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    diff = jnp.where(tri[None, None], s[..., :, None] - s[..., None, :],
+                     -jnp.inf)          # mask BEFORE exp: no inf/overflow
+    lmat = jnp.exp(diff)
+    cb = jnp.einsum("zctn,zcun->zctu", cr, br)
+    y_intra = jnp.einsum("zctu,zcup->zctp", cb * lmat, xr)
+    # chunk summaries: S_c = Bᵀ diag(exp(s_Q − s)) X   (BH,NC,N,P)
+    total = s[..., -1:]                                 # (BH,NC,1)
+    wlast = jnp.exp(total - s)                          # (BH,NC,Q)
+    summ = jnp.einsum("zcun,zcu,zcup->zcnp", br, wlast, xr)
+    decay_c = jnp.exp(total[..., 0])                    # (BH,NC)
+    # inter-chunk prefix states via associative linear-recurrence scan
+    def op(a, bb):
+        (da, ha) = a
+        (db, hb) = bb
+        return (da * db, db[..., None, None] * ha + hb)
+    ds, hs = jax.lax.associative_scan(op, (decay_c, summ), axis=1)
+    # h_prev for chunk c = state after chunk c-1
+    h_prev = jnp.concatenate([jnp.zeros_like(hs[:, :1]), hs[:, :-1]], axis=1)
+    y_inter = jnp.einsum("zctn,zcnp->zctp", cr * jnp.exp(s)[..., None], h_prev)
+    y = (y_intra + y_inter).reshape(bh, lc, p)
+    return y[:, :l] if pad else y
+
+
+def init_mamba2(key, cfg, dtype):
+    d, di, n, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": normal(ks[0], (d, 2 * di + 2 * n + nh), 0.02, dtype),
+        "conv_w": normal(ks[1], (cfg.ssm_conv, conv_dim), 0.2, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "gate_gamma": jnp.zeros((di,), dtype),
+        "out_proj": normal(ks[2], (di, d), 0.02, dtype),
+    }
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv, width K.  xbc: (B,L,C), w: (K,C).
+
+    state: (B, K-1, C) tail of previous tokens (decode); returns (y, tail).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xbc[:, : k - 1])
+    else:
+        pad = state
+    full = jnp.concatenate([pad, xbc], axis=1)
+    y = sum(full[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+    tail = full[:, -(k - 1):]
+    return jax.nn.silu(y + b), tail
+
+
+def mamba2_mixer(params, x, cfg, state=None, engine: str = "chunked"):
+    """x: (B,L,d) → (B,L,d).  state: dict(ssm=(B,nh,N,P), conv=(B,K-1,C))
+    for decode (L == 1); returns (y, new_state)."""
+    b_sz, l, d = x.shape
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xbc, conv_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                  conv_state)
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])            # (B,L,nh)
+    a = -jnp.exp(params["a_log"])                        # (nh,)
+    logdecay = (a * dt)                                  # (B,L,nh)
+    xh = xs.reshape(b_sz, l, nh, hd)
+    x_eff = (xh.astype(jnp.float32) * dt[..., None])
+    if state is None:
+        if engine == "chunked":
+            # head-shared B/C: no (B,H,L,N) broadcast materialized.
+            # (A head-parallel resharding of the SSD interior was tried and
+            # REFUTED — GSPMD's transient reshard copies under remat cost
+            # more than the sharded lmat saved; see EXPERIMENTS.md §Perf.)
+            y = ssd_chunked_grouped(
+                x_eff.transpose(0, 2, 1, 3),            # (B,H,L,P)
+                logdecay.transpose(0, 2, 1),            # (B,H,L)
+                bmat.astype(jnp.float32), cmat.astype(jnp.float32))
+        else:
+            # merge batch and heads (oracle / Pallas paths)
+            xe = x_eff.transpose(0, 2, 1, 3).reshape(b_sz * nh, l, hd)
+            ld = logdecay.transpose(0, 2, 1).reshape(b_sz * nh, l)
+            bm = jnp.broadcast_to(bmat.astype(jnp.float32)[:, None],
+                                  (b_sz, nh, l, n)).reshape(b_sz * nh, l, n)
+            cm = jnp.broadcast_to(cmat.astype(jnp.float32)[:, None],
+                                  (b_sz, nh, l, n)).reshape(b_sz * nh, l, n)
+            if engine == "pallas":
+                from repro.kernels import ops
+                y = ops.ssd_scan(xe, ld, bm, cm)
+            else:
+                from repro.kernels import ref
+                y = ref.ssd_scan_ref(xe, ld, bm, cm)
+            y = y.reshape(b_sz, nh, l, hd)
+        y = y.transpose(0, 2, 1, 3)
+        new_state = None
+    else:
+        # single-step recurrence: h = e^{a·dt} h + dt·B xᵀ ; y = C h
+        h = state["ssm"]                                 # (B,nh,N,P)
+        dec = jnp.exp(logdecay[:, 0])                    # (B,nh)
+        upd = jnp.einsum("bn,bhp->bhnp", bmat[:, 0].astype(jnp.float32),
+                         x_eff[:, 0])
+        h = dec[..., None, None] * h + upd
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), h)
+        y = y[:, None].transpose(0, 1, 2, 3).reshape(b_sz, 1, nh, hd)
+        new_state = {"ssm": h, "conv": conv_tail}
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b_sz, l, di)
+    y = rmsnorm(y.astype(x.dtype) * jax.nn.silu(z), params["gate_gamma"],
+                cfg.norm_eps)
+    return y @ params["out_proj"], new_state
+
+
+def init_mamba2_state(cfg, batch, dtype):
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }

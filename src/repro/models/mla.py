@@ -1,0 +1,93 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are up-projected from a shared compressed latent c_kv (kv_lora wide) plus
+one shared RoPE key head; Q comes through its own low-rank path (q_lora).
+The decode cache stores ONLY (c_kv, k_rope) — (kv_lora + rope_hd) floats per
+token per layer instead of 2·H·hd — which is why a 500k-token MLA cache is
+small (DESIGN.md §4 notes this, though the cell is still skipped per the
+assignment rule).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, normal, rope_freqs
+
+
+def init_mla(key, cfg, dtype):
+    d = cfg.d_model
+    qk = cfg.nope_head_dim + cfg.rope_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wdq": normal(ks[0], (d, cfg.q_lora), 0.02, dtype),
+        "q_gamma": jnp.zeros((cfg.q_lora,), dtype),
+        "wuq": normal(ks[1], (cfg.q_lora, cfg.n_heads * qk), 0.02, dtype),
+        "wdkv": normal(ks[2], (d, cfg.kv_lora), 0.02, dtype),
+        "kv_gamma": jnp.zeros((cfg.kv_lora,), dtype),
+        "wkr": normal(ks[3], (d, cfg.rope_head_dim), 0.02, dtype),
+        "wuk": normal(ks[4], (cfg.kv_lora, cfg.n_heads * cfg.nope_head_dim),
+                      0.02, dtype),
+        "wuv": normal(ks[5], (cfg.kv_lora, cfg.n_heads * cfg.v_head_dim),
+                      0.02, dtype),
+        "wo": normal(ks[6], (cfg.n_heads * cfg.v_head_dim, d), 0.02, dtype),
+    }
+
+
+def mla_attention(params, x, cfg, positions, cache=None, cache_pos=None):
+    """Returns (out, new_cache); cache = dict(ckv=(B,Smax,kv_lora),
+    kr=(B,Smax,rope_hd))."""
+    from repro.models.layers import rmsnorm
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    cq = rmsnorm(x @ params["wdq"], params["q_gamma"], cfg.norm_eps)
+    q = (cq @ params["wuq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckv = rmsnorm(x @ params["wdkv"], params["kv_gamma"], cfg.norm_eps)
+    kr = (x @ params["wkr"]).reshape(b, s, 1, dr)
+    cos, sin = rope_freqs(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    kr = apply_rope(kr, cos, sin)
+    new_cache = None
+    if cache is not None:
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_pos, 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache["kr"], kr[:, :, 0].astype(cache["kr"].dtype),
+            (0, cache_pos, 0))
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+        ckv_all, kr_all = ckv_c, kr_c[:, :, None]
+        kv_len = ckv_all.shape[1]
+        kidx = jnp.arange(kv_len)[None, :]
+        qidx = cache_pos + jnp.arange(s)[:, None]
+        mask = kidx <= qidx
+    else:
+        ckv_all, kr_all = ckv, kr
+        kv_len = s
+        mask = jnp.tril(jnp.ones((s, kv_len), bool))
+    scale = 1.0 / jnp.sqrt(dn + dr)
+    if s == 1 and cache is not None:
+        # DECODE: weight absorption (DeepSeek-V2 §"low-rank KV") — attention
+        # runs entirely in the compressed kv_lora space; the (S, h, dn) and
+        # (S, h, dv) up-projections are NEVER materialized for the cache.
+        wuk = params["wuk"].reshape(cfg.kv_lora, h, dn)
+        wuv = params["wuv"].reshape(cfg.kv_lora, h, dv)
+        q_abs = jnp.einsum("bqhd,lhd->bqhl", q_nope, wuk)     # (b,1,h,lora)
+        logits = (jnp.einsum("bqhl,bkl->bhqk", q_abs, ckv_all)
+                  + jnp.einsum("bqhd,bkod->bhqk", q_rope, kr_all)
+                  ).astype(jnp.float32) * scale
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1).astype(ckv_all.dtype)
+        ctx = jnp.einsum("bhqk,bkl->bqhl", p, ckv_all)        # (b,1,h,lora)
+        out = jnp.einsum("bqhl,lhd->bqhd", ctx, wuv).reshape(b, s, h * dv)
+        return out @ params["wo"], new_cache
+    k_nope = (ckv_all @ params["wuk"]).reshape(b, kv_len, h, dn)
+    v = (ckv_all @ params["wuv"]).reshape(b, kv_len, h, dv)
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+              + jnp.einsum("bqhd,bkod->bhqk", q_rope, kr_all)
+              ).astype(jnp.float32) * scale
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, s, h * dv)
+    return out @ params["wo"], new_cache

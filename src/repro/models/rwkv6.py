@@ -1,0 +1,171 @@
+"""RWKV6 "Finch" mixer (attention-free, data-dependent decay; arXiv:2404.05892).
+
+Time-mix:   S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ ;  y_t = r_t·(S_{t-1} + diag(u)·k_t v_tᵀ)
+with per-channel decay w_t = exp(−exp(w₀ + tanh(x W₁) W₂)) — the
+data-dependent ("Finch") part.  Chunked evaluation: intra-chunk pairwise
+terms as einsums, inter-chunk state carried by a scan (O(L·N·P) like SSD).
+
+Decode carries (B, H, N, P) state — O(1)/token, no KV cache: this is why
+rwkv6 runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal, rmsnorm
+
+
+def init_rwkv6(key, cfg, dtype):
+    d = cfg.d_model
+    lora = 64
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_r": 0.5 * jnp.ones((d,), dtype), "mu_k": 0.5 * jnp.ones((d,), dtype),
+        "mu_v": 0.5 * jnp.ones((d,), dtype), "mu_w": 0.5 * jnp.ones((d,), dtype),
+        "mu_g": 0.5 * jnp.ones((d,), dtype),
+        "wr": normal(ks[0], (d, d), 0.02, dtype),
+        "wk": normal(ks[1], (d, d), 0.02, dtype),
+        "wv": normal(ks[2], (d, d), 0.02, dtype),
+        "wg": normal(ks[3], (d, d), 0.02, dtype),
+        "wo": normal(ks[4], (d, d), 0.02, dtype),
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w1": normal(ks[5], (d, lora), 0.02, dtype),
+        "w2": normal(ks[6], (lora, d), 0.02, dtype),
+        "u": normal(ks[7], (d,), 0.5, jnp.float32),
+        "ln_gamma": jnp.zeros((d,), dtype),
+    }
+
+
+LOGW_MIN = -4.0        # decay clip: keeps exp(±chunk·|logw|) inside f32
+
+
+def _wkv_chunked(r, k, v, logw, u, head_dim: int, chunk: int = 16):
+    """r,k,v,logw: (B,L,d); u: (d,).  Per-head linear recurrence.
+
+    The per-channel decay exp(s_{t-1} − s_j) FACTORIZES across the channel
+    contraction: A[t,j] = Σ_n (r⊙e^{s_shift})[t,n]·(k⊙e^{−s})[j,n] — a plain
+    matmul, no (Q,Q,N) cube.  Cumsums are chunk-relative and logw is clipped
+    at LOGW_MIN so neither factor overflows f32 (chunk·|LOGW_MIN| = 64).
+    """
+    b, l, d = r.shape
+    h = d // head_dim
+    pad = (-l) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0)))  # noqa: E731
+        r, k, v, logw = z(r), z(k), z(v), z(logw)
+    lc = r.shape[1]
+    nc = lc // chunk
+
+    def split(a):     # (B,L,d) -> (B*H, NC, Q, hd)
+        return (a.reshape(b, nc, chunk, h, head_dim)
+                 .transpose(0, 3, 1, 2, 4).reshape(b * h, nc, chunk, head_dim))
+    rr, kk, vv, ww = split(r), split(k), split(v), split(logw)
+    uu = u.reshape(h, head_dim)
+    uu = jnp.tile(uu, (b, 1)).reshape(b * h, head_dim)
+    s = jnp.cumsum(ww, axis=2)                 # (BH,NC,Q,hd), chunk-relative
+    # contribution of step j<t:  (r_t ⊙ Π_{i=j+1..t-1} w_i ⊙ k_j) · v_j
+    # Π_{j+1..t-1} = exp(s_{t-1} − s_j) — shifted cumsum, factorized
+    s_shift = jnp.concatenate([jnp.zeros_like(s[:, :, :1]), s[:, :, :-1]],
+                              axis=2)          # s_{t-1}
+    amat = jnp.einsum("zctn,zcjn->zctj",
+                      rr * jnp.exp(s_shift), kk * jnp.exp(-s))
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    amat = jnp.where(tri[None, None], amat, 0.0)
+    y_intra = jnp.einsum("zctj,zcjp->zctp", amat, vv)
+    # current-token bonus:  (Σ_n r_t·u·k_t) · v_t
+    dot = jnp.sum(rr * uu[:, None, None, :] * kk, axis=-1, keepdims=True)
+    y_bonus = dot * vv
+    # chunk summaries: ΔS_c = Σ_j exp(s_Q − s_j) k_j v_jᵀ ; decay_c = exp(s_Q)
+    total = s[:, :, -1:, :]                        # (BH,NC,1,hd)
+    summ = jnp.einsum("zcjn,zcjp->zcnp", kk * jnp.exp(total - s), vv)
+    decay_c = jnp.exp(total[:, :, 0, :])           # (BH,NC,hd)
+
+    def op(a, bb):
+        (da, ha) = a
+        (db, hb) = bb
+        return (da * db, db[..., :, None] * ha + hb)
+    ds, hs = jax.lax.associative_scan(op, (decay_c, summ), axis=1)
+    h_prev = jnp.concatenate([jnp.zeros_like(hs[:, :1]), hs[:, :-1]], axis=1)
+    y_inter = jnp.einsum("zctn,zcnp->zctp", rr * jnp.exp(s_shift), h_prev)
+    y = y_intra + y_bonus + y_inter
+    y = (y.reshape(b, h, nc, chunk, head_dim).transpose(0, 2, 3, 1, 4)
+          .reshape(b, lc, d))
+    return y[:, :l] if pad else y
+
+
+def rwkv6_time_mix(params, x, cfg, state=None):
+    """x: (B,L,d).  state: dict(prev=(B,d), wkv=(B,H,N,P)) for decode."""
+    b, l, d = x.shape
+    hd = cfg.ssm_head_dim
+    prev_tok = None if state is None else state["prev"]
+    if prev_tok is None:
+        xs = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    else:
+        xs = prev_tok[:, None, :].astype(x.dtype)
+    mix = lambda mu: x + (xs - x) * mu  # noqa: E731
+    r = mix(params["mu_r"]) @ params["wr"]
+    k = mix(params["mu_k"]) @ params["wk"]
+    v = mix(params["mu_v"]) @ params["wv"]
+    g = jax.nn.silu(mix(params["mu_g"]) @ params["wg"])
+    xw = mix(params["mu_w"])
+    logw = -jnp.exp(params["w0"]
+                    + jnp.tanh(xw @ params["w1"]) @ params["w2"]
+                    .astype(jnp.float32))            # (B,L,d), negative
+    logw = jnp.clip(logw, LOGW_MIN, -1e-4)
+    if state is None:
+        y = _wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), logw,
+                         params["u"], hd)
+        new_state = None
+    else:
+        h = cfg.d_model // hd
+        rr = r[:, 0].reshape(b, h, hd).astype(jnp.float32)
+        kk = k[:, 0].reshape(b, h, hd).astype(jnp.float32)
+        vv = v[:, 0].reshape(b, h, hd).astype(jnp.float32)
+        ww = jnp.exp(logw[:, 0]).reshape(b, h, hd)
+        uu = params["u"].reshape(h, hd)
+        S = state["wkv"]                              # (B,H,N=hd,P=hd)
+        kv = jnp.einsum("bhn,bhp->bhnp", kk, vv)
+        out = jnp.einsum("bhn,bhnp->bhp", rr, S + uu[None, :, :, None] * kv)
+        S = ww[..., None] * S + kv
+        y = out.reshape(b, 1, d)
+        new_state = {"prev": x[:, 0].astype(jnp.float32), "wkv": S}
+    y = rmsnorm(y.astype(x.dtype), params["ln_gamma"], cfg.norm_eps) * g
+    return y @ params["wo"], new_state
+
+
+def init_rwkv6_channel_mix(key, cfg, dtype):
+    d, dff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_r": 0.5 * jnp.ones((d,), dtype), "mu_k": 0.5 * jnp.ones((d,), dtype),
+        "wr": normal(k1, (d, d), 0.02, dtype),
+        "wk": normal(k2, (d, dff), 0.02, dtype),
+        "wv": normal(k3, (dff, d), 0.02, dtype),
+    }
+
+
+def rwkv6_channel_mix(params, x, state=None):
+    b, l, d = x.shape
+    prev_tok = None if state is None else state
+    if prev_tok is None:
+        xs = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    else:
+        xs = prev_tok[:, None, :].astype(x.dtype)
+    xr = x + (xs - x) * params["mu_r"]
+    xk = x + (xs - x) * params["mu_k"]
+    r = jax.nn.sigmoid(xr @ params["wr"])
+    h = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    return r * (h @ params["wv"]), \
+        (None if state is None else x[:, 0].astype(jnp.float32))
+
+
+def init_rwkv6_state(cfg, batch):
+    h = cfg.d_model // cfg.ssm_head_dim
+    return {
+        "prev": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "wkv": jnp.zeros((batch, h, cfg.ssm_head_dim, cfg.ssm_head_dim),
+                         jnp.float32),
+        "prev_cm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }

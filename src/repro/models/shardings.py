@@ -1,0 +1,236 @@
+"""Sharding rules: map param/activation pytrees onto the production mesh.
+
+Layout (MaxText-style 2-D/3-D):
+  * ``model`` axis — tensor parallelism: attention heads, FFN hidden, the
+    expert axis of MoE stacks, SSM inner channels.
+  * ``data`` (+ ``pod``) axes — DP + FSDP: the contracting/d_model side of
+    every projection and the vocab axis of the embedding are sharded here, so
+    parameters and optimizer state are *fully* sharded (ZeRO-3); GSPMD then
+    materializes per-layer all-gathers that overlap with the scan-over-layers
+    compute (hillclimbed in EXPERIMENTS.md §Perf).
+  * batch shards over (pod, data); for batch < data-axis (long-context
+    decode) the KV-cache *sequence* axis shards over data instead (context
+    parallelism) — see cache_specs.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# current-mesh registry: model code calls constrain_* which no-op outside a
+# mesh context (CPU smoke tests) and emit with_sharding_constraint inside one
+# ---------------------------------------------------------------------------
+
+_CURRENT_MESH = None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    global _CURRENT_MESH
+    prev = _CURRENT_MESH
+    _CURRENT_MESH = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _CURRENT_MESH = prev
+
+
+def current_mesh():
+    return _CURRENT_MESH
+
+
+def _constrain(x, spec_dims):
+    """spec_dims: tuple of (axis-name | tuple | None) per dim; any axis whose
+    size doesn't divide the dim is dropped."""
+    mesh = _CURRENT_MESH
+    if mesh is None:
+        return x
+    sizes = dict(mesh.shape)
+    out = []
+    for dim, want in zip(x.shape, spec_dims):
+        if want is None:
+            out.append(None)
+            continue
+        axes = want if isinstance(want, tuple) else (want,)
+        axes = tuple(a for a in axes if a in sizes)
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        while axes and dim % prod != 0:
+            prod //= sizes[axes[-1]]
+            axes = axes[:-1]
+        out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*out)))
+
+
+def constrain_residual(x):
+    """Residual stream (B, S, d): batch over (pod,data); sequence over model
+    (Megatron-style sequence parallelism) with d_model fallback."""
+    mesh = _CURRENT_MESH
+    if mesh is None:
+        return x
+    sizes = dict(mesh.shape)
+    model = sizes.get("model", 1)
+    b, s, d = x.shape
+    if s > 1 and s % model == 0:
+        return _constrain(x, (("pod", "data"), "model", None))
+    return _constrain(x, (("pod", "data"), None, "model"))
+
+
+def constrain_logits(x):
+    """(B, S, V): vocab over model (weights already put it there)."""
+    return _constrain(x, (("pod", "data"), None, "model"))
+
+
+def constrain_moe_buffers(x):
+    """(E, cap, d) / (E, cap, ff): experts over model, capacity over data."""
+    return _constrain(x, ("model", ("pod", "data"), None))
+
+
+def fsdp_axes(mesh_axes) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh_axes)
+
+
+def batch_spec(mesh_axes) -> P:
+    fs = fsdp_axes(mesh_axes)
+    return P(fs if len(fs) > 1 else (fs[0] if fs else None))
+
+
+def batch_axes_for(mesh, batch: int):
+    """Largest prefix of (pod, data) whose product divides ``batch``
+    (None when even 'data' alone doesn't divide — e.g. batch 1)."""
+    sizes = dict(mesh.shape)
+    fs = fsdp_axes(mesh.axis_names)
+    full = 1
+    for a in fs:
+        full *= sizes[a]
+    if batch % full == 0:
+        return fs if len(fs) > 1 else fs[0]
+    if "data" in fs and batch % sizes["data"] == 0:
+        return "data"
+    return None
+
+
+def _rules(name: str, fs) -> Optional[tuple]:
+    """Base (unstacked) partition for a leaf by param name."""
+    table = {
+        # embeddings / head
+        "embed": ("model", fs),
+        "lm_head": (fs, "model"),
+        "pos_embed": (None, None),
+        # attention
+        "wq": (fs, "model"), "wk": (fs, "model"), "wv": (fs, "model"),
+        "wo": ("model", fs),
+        # mlp
+        "w_gate": (fs, "model"), "w_up": (fs, "model"), "w_down": ("model", fs),
+        # moe (leading expert axis → EP over model)
+        "router": (fs, None),
+        "moe_w_gate": ("model", fs, None), "moe_w_up": ("model", fs, None),
+        "moe_w_down": ("model", None, fs),
+        "ws_gate": (fs, "model"), "ws_up": (fs, "model"), "ws_down": ("model", fs),
+        # mamba2
+        "in_proj": (fs, "model"), "out_proj": ("model", fs),
+        "conv_w": (None, "model"), "conv_b": ("model",),
+        "a_log": ("model",), "dt_bias": ("model",), "d_skip": ("model",),
+        "gate_gamma": ("model",),
+        # rwkv6
+        "wr": (fs, "model"), "wg": (fs, "model"),
+        "w0": (None,), "w1": (fs, None), "w2": (None, None), "u": (None,),
+        "mu_r": (None,), "mu_k": (None,), "mu_v": (None,), "mu_w": (None,),
+        "mu_g": (None,),
+        # mla
+        "wdq": (fs, None), "wuq": (None, "model"),
+        "wdkv": (fs, None), "wkr": (fs, None),
+        "wuk": (None, "model"), "wuv": (None, "model"),
+        "q_gamma": (None,), "kv_gamma": (None,),
+    }
+    if name in table:
+        return table[name]
+    if name.endswith("gamma") or name.startswith("ln") or name.startswith("mu_"):
+        return (None,)
+    return None
+
+
+def param_specs(params, mesh_axes, moe_names=("w_gate", "w_up", "w_down")):
+    """PartitionSpec pytree matching ``params``; stacked leading layer axes
+    get None."""
+    fs = fsdp_axes(mesh_axes)
+    fs = fs if len(fs) > 1 else (fs[0] if fs else None)
+
+    def spec_of(path, leaf):
+        keys = [getattr(k, "key", str(k)) for k in path]
+        name = keys[-1]
+        in_moe = any("moe" in k for k in keys)
+        lookup = f"moe_{name}" if in_moe and name in moe_names else name
+        base = _rules(lookup, fs)
+        if base is None:
+            base = (None,) * leaf.ndim
+            return P(*base)
+        extra = leaf.ndim - len(base)
+        return P(*((None,) * extra + tuple(base)))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def cache_specs(caches, mesh, batch: int):
+    """KV caches: batch over (pod,data) when divisible, else the *sequence*
+    axis shards over data (context parallelism, long-context decode).
+
+    Head axes that don't divide the model axis (GQA kv ∈ {4, 8}) fall back
+    to sharding head_dim — the contraction then produces partial sums that
+    GSPMD closes with an all-reduce."""
+    sizes = dict(mesh.shape)
+    model = sizes.get("model", 1)
+    dsize = sizes.get("data", 1)
+    bspec = batch_axes_for(mesh, batch)
+    seq_par = bspec is None
+
+    def hd_fallback(heads_dim, hd_dim):
+        """Pick (heads_spec, hd_spec) respecting divisibility."""
+        if heads_dim % model == 0:
+            return "model", None
+        if hd_dim % model == 0:
+            return None, "model"
+        return None, None
+
+    def spec_of(path, leaf):
+        keys = [getattr(k, "key", str(k)) for k in path]
+        name = keys[-1]
+        nd = leaf.ndim
+        shp = leaf.shape
+        if name in ("k", "v", "xk", "xv"):   # (L?, B, S, KV, hd)
+            h_sp, d_sp = hd_fallback(shp[-2], shp[-1])
+            seq_sp = "data" if (seq_par and shp[-3] % dsize == 0) else None
+            base = ((None, seq_sp, h_sp, d_sp) if seq_par
+                    else (bspec, None, h_sp, d_sp))
+        elif name in ("ckv",):          # (L?, B, S, kv_lora)
+            l_sp = "model" if shp[-1] % model == 0 else None
+            seq_sp = "data" if (seq_par and shp[-2] % dsize == 0) else None
+            base = ((None, seq_sp, l_sp) if seq_par else (bspec, None, l_sp))
+        elif name in ("kr",):           # (L?, B, S, rope_hd)
+            seq_sp = "data" if (seq_par and shp[-2] % dsize == 0) else None
+            base = ((None, seq_sp, None) if seq_par else (bspec, None, None))
+        elif name == "ssm":             # (L?, B, nh, N, P)
+            h_sp = "model" if shp[-3] % model == 0 else None
+            base = (bspec, h_sp, None, None)
+        elif name == "conv":            # (L?, B, K-1, C)
+            c_sp = "model" if shp[-1] % model == 0 else None
+            base = (bspec, None, c_sp)
+        elif name == "wkv":             # (L?, B, H, N, P)
+            h_sp = "model" if shp[-3] % model == 0 else None
+            base = (bspec, h_sp, None, None)
+        elif name in ("prev", "prev_cm"):   # (L?, B, d)
+            d_sp = "model" if shp[-1] % model == 0 else None
+            base = (bspec, d_sp)
+        else:
+            base = (None,) * nd
+        extra = nd - len(base)
+        return P(*((None,) * extra + tuple(base)))
+
+    return jax.tree_util.tree_map_with_path(spec_of, caches)

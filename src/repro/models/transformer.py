@@ -1,0 +1,397 @@
+"""The model zoo assembler: one config-driven decoder (+optional encoder)
+covering all ten assigned architectures.
+
+Structure: scan-over-layers with stacked params (compile-size O(1) in depth),
+optional remat on the block body, KV/SSM caches threaded through the scan.
+Families:
+  dense                  — pre-norm GQA + SwiGLU (starcoder2, mistral-large,
+                           minicpm, internvl2 backbone)
+  dense + local/global   — gemma2 (alternating window mask, softcaps, post-norms)
+  moe                    — llama4-scout (top-1 + shared), deepseek-v2 (MLA +
+                           2 shared + 160 routed top-6)
+  hybrid                 — zamba2: Mamba2 stack with ONE weight-shared
+                           attention+MLP block applied every `attn_every`
+                           layers (its KV caches are per *application*)
+  ssm                    — rwkv6 (time-mix + channel-mix)
+  audio enc-dec          — whisper (stub frame embeddings → encoder; decoder
+                           with cross-attention)
+  vlm                    — internvl2 (stub patch embeddings prefix)
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import mamba2 as M2
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R6
+from repro.models import shardings as SH
+from repro.models.layers import normal, rmsnorm, softcap, swiglu
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_mlp(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_gelu:            # starcoder2: 2-matrix GELU MLP
+        return {
+            "w_up": normal(k2, (cfg.d_model, cfg.d_ff), 0.02, dtype),
+            "w_down": normal(k3, (cfg.d_ff, cfg.d_model), 0.02, dtype),
+        }
+    return {
+        "w_gate": normal(k1, (cfg.d_model, cfg.d_ff), 0.02, dtype),
+        "w_up": normal(k2, (cfg.d_model, cfg.d_ff), 0.02, dtype),
+        "w_down": normal(k3, (cfg.d_ff, cfg.d_model), 0.02, dtype),
+    }
+
+
+def _mlp(p, x, cfg):
+    if cfg.mlp_gelu:
+        return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def _init_block(key, cfg, dtype, cross: bool = False):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {"ln1": jnp.zeros((d,), dtype)}
+    if cfg.family == "ssm" and cfg.rwkv:
+        p["tmix"] = R6.init_rwkv6(ks[0], cfg, dtype)
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["cmix"] = R6.init_rwkv6_channel_mix(ks[1], cfg, dtype)
+        return p
+    if cfg.is_mla:
+        p["attn"] = MLA.init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = A.init_attn(ks[0], cfg, dtype)
+    p["ln2"] = jnp.zeros((d,), dtype)
+    if cfg.is_moe:
+        p["moe"] = MOE.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = _init_mlp(ks[1], cfg, dtype)
+    if cross:
+        p["ln_x"] = jnp.zeros((d,), dtype)
+        p["xattn"] = A.init_attn(ks[2], cfg, dtype)
+    if cfg.local_global_alternate:      # gemma2 post-norms
+        p["post1"] = jnp.zeros((d,), dtype)
+        p["post2"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _init_mamba_block(key, cfg, dtype):
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "mamba": M2.init_mamba2(key, cfg, dtype)}
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + cfg.enc_layers + 4)
+    params = {
+        "embed": normal(keys[0], (cfg.vocab_pad, cfg.d_model), 0.02, dtype),
+        "final_gamma": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal(keys[1], (cfg.d_model, cfg.vocab_pad),
+                                   0.02, dtype)
+    if cfg.family == "hybrid":
+        blocks = [_init_mamba_block(keys[2 + i], cfg, dtype)
+                  for i in range(cfg.n_layers)]
+        params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+        shared_key = keys[2 + cfg.n_layers]
+        sk = jax.random.split(shared_key, 3)
+        params["shared"] = {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": A.init_attn(sk[0], cfg, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": _init_mlp(sk[1], cfg, dtype),
+        }
+        return params
+    blocks = [_init_block(keys[2 + i], cfg, dtype,
+                          cross=cfg.enc_layers > 0)
+              for i in range(cfg.n_layers)]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    if cfg.enc_layers:
+        enc = [_init_block(keys[2 + cfg.n_layers + i], cfg, dtype)
+               for i in range(cfg.enc_layers)]
+        params["enc_blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+        params["enc_final_gamma"] = jnp.zeros((cfg.d_model,), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.float32, enc_len: Optional[int] = None) -> dict:
+    hd = cfg.hd
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        return {
+            "attn": {
+                "k": jnp.zeros((groups, batch, max_len, cfg.n_kv_heads, hd),
+                               dtype),
+                "v": jnp.zeros((groups, batch, max_len, cfg.n_kv_heads, hd),
+                               dtype),
+            },
+            "ssm": jnp.zeros((cfg.n_layers, batch, cfg.ssm_nheads,
+                              cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                               cfg.d_inner + 2 * cfg.ssm_state), dtype),
+        }
+    if cfg.family == "ssm" and cfg.rwkv:
+        h = cfg.d_model // cfg.ssm_head_dim
+        l = cfg.n_layers
+        return {
+            "prev": jnp.zeros((l, batch, cfg.d_model), jnp.float32),
+            "wkv": jnp.zeros((l, batch, h, cfg.ssm_head_dim,
+                              cfg.ssm_head_dim), jnp.float32),
+            "prev_cm": jnp.zeros((l, batch, cfg.d_model), jnp.float32),
+        }
+    if cfg.is_mla:
+        return {
+            "ckv": jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_lora),
+                             dtype),
+            "kr": jnp.zeros((cfg.n_layers, batch, max_len,
+                             cfg.rope_head_dim), dtype),
+        }
+    out = {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd),
+                       dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd),
+                       dtype),
+    }
+    if cfg.enc_layers:          # cross-attention K/V, filled at prefill
+        el = enc_len if enc_len is not None else cfg.enc_positions
+        out["xk"] = jnp.zeros((cfg.n_layers, batch, el, cfg.n_kv_heads, hd),
+                              dtype)
+        out["xv"] = jnp.zeros((cfg.n_layers, batch, el, cfg.n_kv_heads, hd),
+                              dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+# layer-scan unroll control: dryrun's cost-correction variants fully unroll
+# the (1- or 2-layer) scans so XLA cost_analysis sees every trip
+_SCAN_UNROLL = 1
+
+
+@contextlib.contextmanager
+def layer_unroll(n: int):
+    global _SCAN_UNROLL
+    prev = _SCAN_UNROLL
+    _SCAN_UNROLL = n
+    try:
+        yield
+    finally:
+        _SCAN_UNROLL = prev
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _dense_block(p, x, cfg, positions, window, cache, cache_pos, enc_out):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.is_mla:
+        a, new_cache = MLA.mla_attention(p["attn"], h, cfg, positions,
+                                         cache=cache, cache_pos=cache_pos)
+    else:
+        a, new_cache = A.attention(p["attn"], h, cfg, positions,
+                                   window=window, cache=cache,
+                                   cache_pos=cache_pos)
+    if cfg.local_global_alternate:
+        a = rmsnorm(a, p["post1"], cfg.norm_eps)
+    x = x + a
+    cross_kv_out = None
+    if enc_out is not None or (cache is not None and "xk" in cache):
+        hx = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+        if enc_out is not None:
+            kv = A.init_cross_kv(p["xattn"], enc_out, cfg)
+            cross_kv_out = kv                  # prefill: store in the cache
+        else:
+            kv = (cache["xk"], cache["xv"])    # decode: reuse cached K/V
+        cx, _ = A.attention(p["xattn"], hx, cfg, positions, is_causal=False,
+                            kv_override=kv)
+        x = x + cx
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        f = MOE.moe_ffn_a2a(p["moe"], h2, cfg)  # falls back off-mesh
+    else:
+        f = _mlp(p["mlp"], h2, cfg)
+    if cfg.local_global_alternate:
+        f = rmsnorm(f, p["post2"], cfg.norm_eps)
+    if new_cache is not None and cache is not None and "xk" in cache:
+        new_cache["xk"] = (cross_kv_out[0].astype(cache["xk"].dtype)
+                           if cross_kv_out is not None else cache["xk"])
+        new_cache["xv"] = (cross_kv_out[1].astype(cache["xv"].dtype)
+                           if cross_kv_out is not None else cache["xv"])
+    return x + f, new_cache
+
+
+def _run_decoder(params, cfg, x, positions, caches, cache_pos, enc_out,
+                 remat: str):
+    """Scan the (stacked) decoder blocks; returns (x, new_caches)."""
+    l = cfg.n_layers
+    if cfg.family == "hybrid":
+        return _run_hybrid(params, cfg, x, positions, caches, cache_pos,
+                           remat)
+    layer_ids = jnp.arange(l)
+    if cfg.local_global_alternate and cfg.window:
+        windows = jnp.where(layer_ids % 2 == 0, cfg.window, 1 << 30)
+    elif cfg.window:
+        windows = jnp.full((l,), cfg.window)
+    else:
+        windows = jnp.full((l,), 1 << 30)
+
+    def body(x, inp):
+        p, win, cache = inp
+        if cfg.family == "ssm" and cfg.rwkv:
+            st = None if cache is None else {"prev": cache["prev"],
+                                             "wkv": cache["wkv"]}
+            h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+            t, new_t = R6.rwkv6_time_mix(p["tmix"], h, cfg, st)
+            x = x + t
+            h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            cm_state = None if cache is None else cache["prev_cm"]
+            c, new_cm = R6.rwkv6_channel_mix(p["cmix"], h2, cm_state)
+            x = x + c
+            new_cache = None if cache is None else {
+                "prev": new_t["prev"], "wkv": new_t["wkv"],
+                "prev_cm": new_cm}
+            return SH.constrain_residual(x), new_cache
+        x, new_cache = _dense_block(p, x, cfg, positions, win, cache,
+                                    cache_pos, enc_out)
+        x = SH.constrain_residual(x)
+        return x, (new_cache if cache is not None else None)
+
+    body = _maybe_remat(body, remat)
+    if caches is None:
+        x, _ = jax.lax.scan(lambda c, i: body(c, (i[0], i[1], None)),
+                            x, (params["blocks"], windows),
+                            unroll=min(_SCAN_UNROLL, l))
+        return x, None
+    x, new_caches = jax.lax.scan(
+        lambda c, i: body(c, i), x, (params["blocks"], windows, caches),
+        unroll=min(_SCAN_UNROLL, l))
+    return x, new_caches
+
+
+def _run_hybrid(params, cfg, x, positions, caches, cache_pos, remat: str):
+    """zamba2: groups of `attn_every` mamba layers + one shared attn block."""
+    every = cfg.attn_every
+    groups = cfg.n_layers // every
+    gp = jax.tree.map(
+        lambda a: a.reshape((groups, every) + a.shape[1:]), params["blocks"])
+    shared = params["shared"]
+
+    def mamba_one(x, inp):
+        p, st = inp
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        y, new_st = M2.mamba2_mixer(p["mamba"], h, cfg, state=st)
+        return x + y, new_st
+
+    mamba_one = _maybe_remat(mamba_one, remat)
+
+    def group_body(x, inp):
+        p_grp, attn_cache, ssm_grp = inp
+        # unroll: every mamba layer appears in the HLO (cost-analysis truth)
+        if ssm_grp is None:
+            x, _ = jax.lax.scan(lambda c, i: mamba_one(c, (i, None)),
+                                x, p_grp, unroll=every)
+            new_ssm = None
+        else:
+            x, new_ssm = jax.lax.scan(mamba_one, x, (p_grp, ssm_grp),
+                                      unroll=every)
+        h = rmsnorm(x, shared["ln1"], cfg.norm_eps)
+        a, new_kv = A.attention(shared["attn"], h, cfg, positions,
+                                cache=attn_cache, cache_pos=cache_pos)
+        x = x + a
+        h2 = rmsnorm(x, shared["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, shared["mlp"]["w_gate"], shared["mlp"]["w_up"],
+                       shared["mlp"]["w_down"])
+        return SH.constrain_residual(x), (new_kv, new_ssm)
+
+    if caches is None:
+        x, _ = jax.lax.scan(lambda c, i: group_body(c, (i, None, None)),
+                            x, gp, unroll=min(_SCAN_UNROLL, groups))
+        return x, None
+    ssm_g = jax.tree.map(
+        lambda a: a.reshape((groups, every) + a.shape[1:]),
+        {"ssm": caches["ssm"], "conv": caches["conv"]})
+    x, (new_kv, new_ssm) = jax.lax.scan(
+        group_body, x, (gp, caches["attn"], ssm_g),
+        unroll=min(_SCAN_UNROLL, groups))
+    new_caches = {
+        "attn": new_kv,
+        "ssm": new_ssm["ssm"].reshape(caches["ssm"].shape),
+        "conv": new_ssm["conv"].reshape(caches["conv"].shape),
+    }
+    return x, new_caches
+
+
+def _run_encoder(params, cfg, frames, remat: str):
+    x = frames
+    pos = jnp.arange(frames.shape[1])
+
+    def body(x, p):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        a, _ = A.attention(p["attn"], h, cfg, pos, is_causal=False)
+        x = x + a
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + _mlp(p["mlp"], h2, cfg)
+        return x, None
+
+    body = _maybe_remat(body, remat)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"],
+                        unroll=min(_SCAN_UNROLL, params["enc_blocks"][
+                            "ln1"].shape[0]))
+    return rmsnorm(x, params["enc_final_gamma"], cfg.norm_eps)
+
+
+def forward(params, cfg: ArchConfig, tokens, *, prefix_embeds=None,
+            enc_frames=None, caches=None, cache_pos=None,
+            remat: str = "none"):
+    """Returns (logits, new_caches).
+
+    tokens: (B, S) int32.  prefix_embeds: (B, P, d) stub modality embeddings
+    prepended to the token embeddings (vlm).  enc_frames: (B, F, d) stub
+    audio frames (whisper encoder input).  caches + cache_pos → decode /
+    prefill-with-cache mode.
+    """
+    x = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model)).astype(
+        params["embed"].dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = SH.constrain_residual(x)
+    s = x.shape[1]
+    pos0 = 0 if cache_pos is None else cache_pos
+    positions = pos0 + jnp.arange(s)
+    enc_out = None
+    if cfg.enc_layers and enc_frames is not None:
+        # prefill/train: run the encoder; decode reuses cached cross-K/V
+        enc_out = _run_encoder(params, cfg, enc_frames, remat)
+    x, new_caches = _run_decoder(params, cfg, x, positions, caches,
+                                 cache_pos, enc_out, remat)
+    x = rmsnorm(x, params["final_gamma"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    logits = SH.constrain_logits(logits)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logits, new_caches

@@ -1,0 +1,45 @@
+"""Serving steps: prefill + decode (the functions dryrun.py lowers for the
+``prefill_*`` / ``decode_*`` / ``long_*`` cells)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+def prefill_step(params, cfg: ArchConfig, tokens, caches,
+                 prefix_embeds=None, enc_frames=None, remat: str = "none"):
+    """Full-sequence forward that fills the KV/state caches.
+    Returns (last_token_logits, caches)."""
+    kw = {}
+    if prefix_embeds is not None:
+        kw["prefix_embeds"] = prefix_embeds
+    if enc_frames is not None:
+        kw["enc_frames"] = enc_frames
+    logits, caches = T.forward(params, cfg, tokens, caches=caches,
+                               cache_pos=0, remat=remat, **kw)
+    return logits[:, -1], caches
+
+
+def decode_step(params, cfg: ArchConfig, last_token, caches, pos,
+                enc_frames=None):
+    """One token in, one token out; O(cache) attention / O(1) SSM state.
+    last_token: (B, 1) int32; pos: scalar int32 (tokens already cached)."""
+    kw = {}
+    if enc_frames is not None:
+        kw["enc_frames"] = enc_frames
+    logits, caches = T.forward(params, cfg, last_token, caches=caches,
+                               cache_pos=pos, **kw)
+    return logits[:, -1], caches
+
+
+def greedy_token(logits: jax.Array, temperature: float = 0.0,
+                 key: Optional[jax.Array] = None) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1) \
+        .astype(jnp.int32)

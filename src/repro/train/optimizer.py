@@ -1,0 +1,91 @@
+"""Hand-rolled AdamW + LR schedules (no optax offline).
+
+Includes the WSD (warmup–stable–decay) schedule minicpm trains with
+(arXiv:2404.06395) and standard cosine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "wsd"            # wsd | cosine | const
+    warmup_steps: int = 100
+    stable_steps: int = 1000
+    decay_steps: int = 100
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / cfg.warmup_steps)
+    if cfg.schedule == "const":
+        return cfg.peak_lr * warm
+    if cfg.schedule == "cosine":
+        total = cfg.stable_steps + cfg.decay_steps
+        t = jnp.clip((s - cfg.warmup_steps) / total, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return cfg.peak_lr * warm * (cfg.min_lr_frac
+                                     + (1 - cfg.min_lr_frac) * cos)
+    # WSD: warmup → stable plateau → sharp decay (minicpm)
+    in_decay = s > (cfg.warmup_steps + cfg.stable_steps)
+    t = jnp.clip((s - cfg.warmup_steps - cfg.stable_steps) / cfg.decay_steps,
+                 0.0, 1.0)
+    decay = cfg.min_lr_frac ** t
+    return cfg.peak_lr * warm * jnp.where(in_decay, decay, 1.0)
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)  # noqa: E731
+    return {"mu": zeros(params), "nu": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt_state, params, cfg: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        wd = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        return (p.astype(jnp.float32) - lr * (delta + wd)).astype(p.dtype), \
+            mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, \
+        {"lr": lr, "grad_norm": gn}

@@ -1,0 +1,107 @@
+"""Training step: next-token loss, grads, AdamW — with optional int8
+error-feedback gradient compression on the slow (inter-pod) axis.
+
+The step function is pure and jit/pjit-able; dryrun.py lowers exactly this
+function for every (arch × train shape × mesh) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update
+
+
+def next_token_loss(params, cfg: ArchConfig, batch, remat: str = "full"):
+    """batch: tokens (B, S+1) [+ prefix_embeds / enc_frames stubs]."""
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    kw = {}
+    if cfg.n_prefix_embeds:
+        kw["prefix_embeds"] = batch["prefix_embeds"]
+    if cfg.enc_layers:
+        kw["enc_frames"] = batch["enc_frames"]
+    logits, _ = T.forward(params, cfg, inputs, remat=remat, **kw)
+    # modality prefixes don't predict tokens — score text positions only
+    if cfg.n_prefix_embeds:
+        logits = logits[:, cfg.n_prefix_embeds:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def _compress_int8(g: jax.Array, err: jax.Array):
+    """Stochastic-free int8 quantization with error feedback (1-bit-Adam
+    style).  Models inter-pod gradient compression: the all-reduce of the
+    quantized tensor moves 4× fewer bytes on the slowest links."""
+    g = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g - deq
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptConfig,
+                    remat: str = "full", grad_compress: bool = False,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) → (params, opt, metrics).
+
+    ``microbatches`` > 1 → gradient accumulation over a scan: peak
+    activation memory shrinks ~linearly while FLOPs stay constant (the knob
+    that fits the big train cells into HBM — EXPERIMENTS.md §Perf).
+    opt_state carries an ``err`` pytree when grad_compress is on.
+    """
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(next_token_loss)(
+                params, cfg, batch, remat)
+
+        mb_batch = jax.tree.map(
+            lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                + x.shape[1:]), batch)
+
+        def micro(carry, mb):
+            gacc, lacc = carry
+            loss, g = jax.value_and_grad(next_token_loss)(
+                params, cfg, mb, remat)
+            gacc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gacc, g)
+            return (gacc, lacc + loss), None
+
+        init = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params), jnp.float32(0.0))
+        (gsum, lsum), _ = jax.lax.scan(micro, init, mb_batch)
+        scale = 1.0 / microbatches
+        return lsum * scale, jax.tree.map(lambda g: g * scale, gsum)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        if grad_compress:
+            flat_g, tdef = jax.tree.flatten(grads)
+            flat_e = jax.tree.leaves(opt_state["err"])
+            pairs = [_compress_int8(g, e) for g, e in zip(flat_g, flat_e)]
+            grads = tdef.unflatten([p[0] for p in pairs])
+            new_err = tdef.unflatten([p[1] for p in pairs])
+        new_params, new_opt, metrics = adamw_update(
+            grads, {k: opt_state[k] for k in ("mu", "nu", "step")},
+            params, opt_cfg)
+        if grad_compress:
+            new_opt["err"] = new_err
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_opt_state(params, grad_compress: bool = False):
+    st = adamw_init(params)
+    if grad_compress:
+        st["err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return st

@@ -1,0 +1,109 @@
+"""Distributed paths: ParHIP shard_map (1 dev inline + 8 fake devs via
+subprocess), evolutionary algorithm, mesh construction, dry-run artifacts."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.evolve import combine, kaffpaE
+from repro.core.kaffpa import PRESETS, kaffpa
+from repro.core.parhip import parhip, shard_graph
+from repro.core.partition import edge_cut, evaluate, is_feasible
+from repro.io.generators import grid2d
+
+GRID = grid2d(16, 16)
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_parhip_single_device():
+    part = parhip(GRID, 4, 0.03, "fastmesh", seed=1)
+    ev = evaluate(GRID, part, 4)
+    assert ev["feasible"]
+
+
+def test_shard_graph_partitions_edges():
+    sg = shard_graph(GRID, 4)
+    assert sg.n_shards == 4
+    assert float(sg.w.sum()) == float(GRID.adjwgt.sum())
+    assert float(sg.vwgt.sum()) == float(GRID.vwgt.sum())
+
+
+@pytest.mark.slow
+def test_parhip_multidevice_subprocess():
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.io.generators import grid2d
+        from repro.core.parhip import parhip
+        from repro.core.partition import evaluate
+        assert len(jax.devices()) == 8
+        mesh = Mesh(np.array(jax.devices()), ("nodes",))
+        g = grid2d(16, 16)
+        part = parhip(g, 4, 0.03, "ultrafastmesh", seed=2, mesh=mesh)
+        ev = evaluate(g, part, 4)
+        assert ev["feasible"], ev
+        print("MULTIDEV_OK", ev["cut"])
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "MULTIDEV_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_combine_preserves_both_parents_representability():
+    pa = kaffpa(GRID, 4, 0.03, "fast", seed=1)
+    pb = kaffpa(GRID, 4, 0.03, "fast", seed=2)
+    child = combine(GRID, pa, pb, 4, 0.03, PRESETS["fast"], seed=3)
+    # the combine operator must never be worse than the better parent
+    assert edge_cut(GRID, child) <= min(edge_cut(GRID, pa),
+                                        edge_cut(GRID, pb))
+    assert is_feasible(GRID, child, 4, 0.03)
+
+
+def test_kaffpaE_improves_over_single_run():
+    single = kaffpa(GRID, 4, 0.03, "fast", seed=9)
+    evo = kaffpaE(GRID, 4, 0.03, "fast", n_islands=2, population=2,
+                  time_limit=4, seed=9)
+    assert edge_cut(GRID, evo) <= edge_cut(GRID, single)
+
+
+def test_production_mesh_shapes():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh()
+        assert dict(m1.shape) == {"data": 16, "model": 16}
+        m2 = make_production_mesh(multi_pod=True)
+        assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+        print("MESH_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code],
+                       env=dict(os.environ, PYTHONPATH=SRC),
+                       capture_output=True, text=True, timeout=300)
+    assert "MESH_OK" in r.stdout, r.stdout + r.stderr
+
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def test_dryrun_artifacts_wellformed():
+    """Integration: the dry-run sweep's JSON records are complete + sane."""
+    if not os.path.isdir(RESULTS) or not os.listdir(RESULTS):
+        pytest.skip("dry-run sweep not executed yet")
+    for fn in os.listdir(RESULTS):
+        with open(os.path.join(RESULTS, fn)) as f:
+            rec = json.load(f)
+        if "skipped" in rec:
+            continue
+        assert rec["hlo_flops"] > 0, fn
+        assert rec["memory_analysis"]["temp_bytes"] >= 0, fn
+        if rec["kind"] == "train":
+            # corrected HLO flops must be >= plain model flops per chip
+            assert rec["hlo_flops"] * rec["n_chips"] >= rec["model_flops"], fn

@@ -1,0 +1,108 @@
+"""Graph containers, Metis/binary IO, graphchecker, generators."""
+import numpy as np
+import pytest
+
+from repro.core.csr import Graph, GraphFormatError, to_coo, to_ell
+from repro.io import binio, metis
+from repro.io.generators import (barabasi_albert, erdos_renyi, grid2d,
+                                 grid3d, random_geometric, rmat,
+                                 watts_strogatz, weighted_grid)
+
+
+def test_from_edges_dedup_and_symmetry():
+    g = Graph.from_edges(4, [0, 1, 0, 0], [1, 0, 2, 2], [1, 2, 5, 7])
+    assert g.n == 4
+    # (0,1) merged weight 3, (0,2) merged weight 12
+    assert g.m == 2
+    assert g.check() == []
+    assert g.total_ewgt() == 15
+
+
+def test_graphchecker_catches_errors():
+    g = Graph(np.array([0, 1, 2]), np.array([1, 0]), np.ones(2), np.ones(2))
+    assert g.check() == []
+    # asymmetric weights
+    bad = Graph(np.array([0, 1, 2]), np.array([1, 0]), np.ones(2),
+                np.array([1, 2]))
+    assert "differ" in ";".join(bad.check(raise_on_error=False))
+    with pytest.raises(GraphFormatError):
+        bad.check()
+    # self loop
+    loop = Graph(np.array([0, 1]), np.array([0]), np.ones(1), np.ones(1))
+    assert any("self" in e for e in loop.check(raise_on_error=False))
+
+
+@pytest.mark.parametrize("gen", [
+    lambda: grid2d(8, 8), lambda: grid3d(4, 4, 4),
+    lambda: rmat(8, 4, seed=1), lambda: barabasi_albert(300, 3, seed=1),
+    lambda: watts_strogatz(200, 6, 0.1, seed=1),
+    lambda: erdos_renyi(200, 6.0, seed=1),
+    lambda: random_geometric(300, seed=1), lambda: weighted_grid(8, 8)])
+def test_generators_valid(gen):
+    g = gen()
+    assert g.check() == []
+    assert g.n > 0 and g.m > 0
+
+
+def test_metis_roundtrip(tmp_path):
+    g = weighted_grid(7, 9, seed=3)
+    p = str(tmp_path / "g.graph")
+    metis.write_metis(g, p)
+    g2 = metis.read_metis(p)
+    assert np.array_equal(g.xadj, g2.xadj)
+    assert np.array_equal(g.adjncy, g2.adjncy)
+    assert np.array_equal(g.adjwgt, g2.adjwgt)
+    assert metis.graphchecker(p) == []
+
+
+def test_metis_rejects_bad_file(tmp_path):
+    p = str(tmp_path / "bad.graph")
+    with open(p, "w") as f:
+        f.write("2 1\n2\n")        # vertex 2 lists nothing: m mismatch
+    assert metis.graphchecker(p) != []
+
+
+def test_binary_roundtrip(tmp_path):
+    g = grid2d(6, 6)
+    p = str(tmp_path / "g.bin")
+    binio.write_binary(g, p)
+    g2 = binio.read_binary(p)
+    assert np.array_equal(g.adjncy, g2.adjncy)
+    assert np.array_equal(g.xadj, g2.xadj)
+
+
+def test_graph2binary_external_matches(tmp_path):
+    g = grid2d(5, 8)
+    mp, bp1, bp2 = (str(tmp_path / n) for n in ("m.graph", "a.bin", "b.bin"))
+    metis.write_metis(g, mp)
+    binio.graph2binary(mp, bp1)
+    binio.graph2binary_external(mp, bp2)
+    with open(bp1, "rb") as a, open(bp2, "rb") as b:
+        assert a.read() == b.read()
+
+
+def test_partition_file_roundtrip(tmp_path):
+    part = np.array([0, 1, 2, 1, 0])
+    p = str(tmp_path / "part")
+    metis.write_partition(part, p)
+    assert np.array_equal(metis.read_partition(p), part)
+    binio.write_partition_binary(part, p + ".bin")
+    assert np.array_equal(binio.read_partition_binary(p + ".bin"), part)
+
+
+def test_device_views():
+    g = weighted_grid(6, 6, seed=1)
+    ell = to_ell(g)
+    coo = to_coo(g)
+    assert ell.n_pad % 128 == 0
+    assert coo.e_pad % 256 == 0
+    # padding carries zero weight
+    assert float(coo.w.sum()) == float(g.adjwgt.sum())
+    assert float(ell.wgt.sum()) == float(g.adjwgt.sum())
+
+
+def test_separator_output_format(tmp_path):
+    part = np.array([0, 1, 0, 1])
+    metis.write_separator(part, np.array([2]), 2, str(tmp_path / "sep"))
+    out = np.loadtxt(str(tmp_path / "sep"), dtype=int)
+    assert out[2] == 2 and out[0] == 0

@@ -1,0 +1,104 @@
+"""KaFFPa / refinement / LP / KaBaPE behaviour tests."""
+import numpy as np
+import pytest
+
+from repro.core import lp as lp_mod
+from repro.core.csr import to_coo
+from repro.core.initial import random_partition, recursive_bisection
+from repro.core.kabape import balance_path, kabape_refine
+from repro.core.kaffpa import PRESETS, kaffpa
+from repro.core.partition import (balance, edge_cut, evaluate, is_feasible)
+from repro.core.refine import refine_kway, multi_try_refine
+from repro.io.generators import barabasi_albert, grid2d
+
+
+GRID = grid2d(16, 16)
+BA = barabasi_albert(600, 3, seed=7)
+
+
+def test_size_constrained_lp_respects_cap():
+    clusters = lp_mod.size_constrained_lp(BA, max_cluster_weight=20, iters=6)
+    sizes = np.bincount(clusters)
+    assert sizes.max() <= 20
+    assert len(np.unique(clusters)) < BA.n            # actually clustered
+
+
+def test_refine_improves_random():
+    p0 = random_partition(GRID, 4, seed=0)
+    p1 = refine_kway(GRID, p0, 4, rounds=10, seed=1)
+    assert edge_cut(GRID, p1) < edge_cut(GRID, p0)
+    assert is_feasible(GRID, p1, 4, 0.03)
+
+
+def test_refine_never_worsens():
+    p = kaffpa(GRID, 4, 0.03, "fast", seed=5)
+    c0 = edge_cut(GRID, p)
+    p2 = refine_kway(GRID, p, 4, rounds=6, seed=9)
+    assert edge_cut(GRID, p2) <= c0
+
+
+def test_multi_try_refine():
+    p0 = random_partition(GRID, 2, seed=3)
+    p0 = refine_kway(GRID, p0, 2, rounds=6, seed=3)
+    p1 = multi_try_refine(GRID, p0, 2, tries=2, rounds=6, seed=3)
+    assert edge_cut(GRID, p1) <= edge_cut(GRID, p0)
+
+
+@pytest.mark.parametrize("preset", list(PRESETS))
+def test_kaffpa_presets_feasible(preset):
+    g = BA if "social" in preset else GRID
+    part = kaffpa(g, 4, 0.03, preset, seed=2)
+    ev = evaluate(g, part, 4)
+    assert ev["feasible"], ev
+    assert ev["cut"] > 0
+    # sane quality: far better than a random partition
+    assert ev["cut"] < edge_cut(g, random_partition(g, 4, seed=0)) * 0.8
+
+
+def test_kaffpa_input_partition_improves():
+    p0 = random_partition(GRID, 4, seed=1)
+    p1 = kaffpa(GRID, 4, 0.03, "fast", seed=1, input_partition=p0)
+    assert edge_cut(GRID, p1) <= edge_cut(GRID, p0)
+
+
+def test_kaffpa_balance_edges():
+    part = kaffpa(BA, 4, 0.05, "fastsocial", seed=1, balance_edges=True)
+    gb = BA.with_edge_balanced_weights()
+    assert balance(gb, part, 4) <= 1.05 + 1e-6
+
+
+def test_kabape_perfect_balance():
+    p = kaffpa(GRID, 4, 0.03, "fast", seed=3)
+    p2 = kabape_refine(GRID, p, 4, eps=0.0, seed=1)
+    assert is_feasible(GRID, p2, 4, 0.0)
+    assert edge_cut(GRID, p2) <= edge_cut(GRID, p) * 1.2
+
+
+def test_balance_path_fixes_infeasible():
+    # deliberately unbalanced partition
+    p = np.zeros(GRID.n, dtype=np.int64)
+    p[: GRID.n // 8] = 1
+    p[GRID.n // 8: GRID.n // 4] = 2
+    p[GRID.n // 4: GRID.n // 2 + 40] = 3
+    p2 = balance_path(GRID, p, 4, eps=0.0)
+    assert is_feasible(GRID, p2, 4, 0.0)
+
+
+def test_recursive_bisection_covers_all_blocks():
+    part = recursive_bisection(GRID, 5, seed=2)
+    assert set(np.unique(part)) == set(range(5))
+
+
+def test_capped_accept_guarantee():
+    import jax.numpy as jnp
+    import jax
+    coo = to_coo(GRID)
+    n = coo.n_pad
+    labels = jnp.zeros((n,), jnp.int32)
+    proposal = jnp.ones((n,), jnp.int32)     # everyone wants block 1
+    sizes = jnp.zeros((2,), jnp.float32).at[0].add(float(GRID.n))
+    cap = jnp.array([300.0, 50.0])
+    pri = jnp.arange(n, dtype=jnp.float32)
+    out = lp_mod.capped_accept(labels, proposal, coo.vwgt, sizes, cap, pri)
+    inflow = float(coo.vwgt[np.asarray(out) == 1].sum())
+    assert inflow <= 50.0

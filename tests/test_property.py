@@ -1,0 +1,111 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.csr import Graph, to_coo
+from repro.core.partition import (balance, block_weights, edge_cut,
+                                  edge_cut_device)
+from repro.core.separator import partition_to_vertex_separator, \
+    verify_separator
+from repro.core import lp as lp_mod
+from repro.io import metis
+
+
+@st.composite
+def graphs(draw, max_n=24):
+    n = draw(st.integers(2, max_n))
+    m = draw(st.integers(1, 3 * n))
+    u = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    v = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    w = draw(st.lists(st.integers(1, 9), min_size=m, max_size=m))
+    return Graph.from_edges(n, u, v, w)
+
+
+@given(graphs())
+@settings(max_examples=40, deadline=None)
+def test_from_edges_always_valid(g):
+    assert g.check() == []
+
+
+@given(graphs(), st.integers(2, 4), st.integers(0, 99))
+@settings(max_examples=25, deadline=None)
+def test_cut_host_equals_device(g, k, seed):
+    rng = np.random.default_rng(seed)
+    part = rng.integers(0, k, g.n)
+    coo = to_coo(g)
+    lab = np.zeros(coo.n_pad, dtype=np.int32)
+    lab[:g.n] = part
+    host = edge_cut(g, part)
+    dev = float(edge_cut_device(coo, jnp.asarray(lab)))
+    assert abs(host - dev) < 1e-3
+
+
+@given(graphs(), st.integers(2, 4), st.integers(0, 99))
+@settings(max_examples=20, deadline=None)
+def test_block_weights_partition_total(g, k, seed):
+    rng = np.random.default_rng(seed)
+    part = rng.integers(0, k, g.n)
+    bw = block_weights(g, part, k)
+    assert bw.sum() == g.total_vwgt()
+    assert balance(g, part, k) >= bw.max() / (g.total_vwgt())
+
+
+@given(graphs(max_n=16), st.integers(0, 99))
+@settings(max_examples=20, deadline=None)
+def test_separator_always_separates(g, seed):
+    rng = np.random.default_rng(seed)
+    part = rng.integers(0, 2, g.n)
+    sep = partition_to_vertex_separator(g, part, 2)
+    assert verify_separator(g, part, sep, 2)
+
+
+@given(graphs(max_n=20), st.integers(2, 30), st.integers(0, 9))
+@settings(max_examples=15, deadline=None)
+def test_lp_clustering_respects_any_cap(g, cap, seed):
+    clusters = lp_mod.size_constrained_lp(g, float(cap), iters=4, seed=seed)
+    sizes = np.bincount(clusters, weights=g.vwgt.astype(float),
+                        minlength=clusters.max() + 1)
+    # singleton clusters may exceed cap only if a single node does
+    for cid in np.unique(clusters):
+        members = np.flatnonzero(clusters == cid)
+        if len(members) > 1:
+            assert g.vwgt[members].sum() <= cap
+
+
+@given(graphs(max_n=20))
+@settings(max_examples=20, deadline=None)
+def test_metis_roundtrip_property(g):
+    import tempfile, os
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "g.graph")
+        metis.write_metis(g, p)
+        g2 = metis.read_metis(p)
+        assert np.array_equal(g.xadj, g2.xadj)
+        assert np.array_equal(g.adjncy, g2.adjncy)
+        assert np.array_equal(g.adjwgt, g2.adjwgt)
+        assert np.array_equal(g.vwgt, g2.vwgt)
+
+
+@given(st.integers(2, 6), st.integers(0, 999))
+@settings(max_examples=20, deadline=None)
+def test_capped_accept_never_overflows(k, seed):
+    """Invariant: for every target, size + accepted inflow <= cap."""
+    rng = np.random.default_rng(seed)
+    n = 64
+    labels = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+    proposal = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+    vwgt = jnp.asarray(rng.integers(1, 4, n), jnp.float32)
+    sizes = jnp.zeros((k,), jnp.float32).at[labels].add(vwgt)
+    cap = jnp.asarray(sizes + rng.integers(0, 6, k), jnp.float32)
+    pri = jnp.asarray(rng.random(n), jnp.float32)
+    out = np.asarray(lp_mod.capped_accept(labels, proposal, vwgt, sizes,
+                                          cap, pri))
+    moved_in = np.zeros(k)
+    for i in range(n):
+        if out[i] != int(labels[i]):
+            assert out[i] == int(proposal[i])   # only proposed moves happen
+            moved_in[out[i]] += float(vwgt[i])
+    for t in range(k):
+        assert float(sizes[t]) + moved_in[t] <= float(cap[t]) + 1e-5

@@ -1,0 +1,123 @@
+"""Separators, edge partitioning, mapping, ordering, exact solver,
+library interface."""
+import numpy as np
+import pytest
+
+from repro.core.csr import Graph
+from repro.core.edgepart import (build_spac, edge_partition,
+                                 naive_edge_partition)
+from repro.core.ilp import ilp_exact, ilp_improve
+from repro.core.kaffpa import kaffpa
+from repro.core.mapping import (processor_distance_matrix, process_mapping,
+                                qap_cost, kaffpa_with_mapping)
+from repro.core.ordering import (apply_reductions, fast_reduced_nd, fill_in,
+                                 reduced_nd, _min_degree_order)
+from repro.core.partition import edge_cut, edge_partition_metrics
+from repro.core.separator import (node_separator,
+                                  partition_to_vertex_separator,
+                                  verify_separator)
+from repro.core import interface as api
+from repro.io.generators import grid2d, grid3d, barabasi_albert
+
+GRID = grid2d(12, 12)
+
+
+def test_2way_separator_valid_and_small():
+    sep, part = node_separator(GRID, 0.2, "fast", seed=1)
+    assert verify_separator(GRID, part, sep, 2)
+    # a 12x12 grid has a 12-node column separator; VC must be <= boundary
+    assert 0 < len(sep) <= 24
+
+
+def test_kway_separator_valid():
+    part = kaffpa(GRID, 4, 0.03, "fast", seed=1)
+    sep = partition_to_vertex_separator(GRID, part, 4)
+    assert verify_separator(GRID, part, sep, 4)
+
+
+def test_spac_structure():
+    spac, esplit = build_spac(GRID, infinity=100)
+    assert spac.n == 2 * GRID.m
+    assert spac.check() == []
+    assert esplit.shape == (GRID.m, 2)
+
+
+def test_edge_partition_beats_naive_replication():
+    ep = edge_partition(GRID, 4, 0.05, "fast", seed=1)
+    nv = naive_edge_partition(GRID, 4, seed=1)
+    m_ep = edge_partition_metrics(GRID, ep, 4)
+    m_nv = edge_partition_metrics(GRID, nv, 4)
+    assert m_ep["replication"] < m_nv["replication"]
+
+
+def test_distance_matrix():
+    dist = processor_distance_matrix([2, 2], [1, 10])
+    assert dist[0, 0] == 0
+    assert dist[0, 1] == 1          # same pair, different core
+    assert dist[0, 2] == 10         # different pair
+
+
+def test_process_mapping_improves_clustered_pattern():
+    rng = np.random.default_rng(0)
+    k = 16
+    comm = np.zeros((k, k), dtype=np.int64)
+    # 4 chatty cliques scattered across ids — identity mapping is bad
+    perm = rng.permutation(k)
+    for c in range(4):
+        ids = perm[c * 4:(c + 1) * 4]
+        for i in ids:
+            for j in ids:
+                if i != j:
+                    comm[i, j] = 100
+    mapping = process_mapping(comm, "4:4", "1:10", seed=1)
+    dist = processor_distance_matrix([4, 4], [1, 10])
+    assert qap_cost(comm, dist, mapping) < qap_cost(comm, dist, np.arange(k))
+    assert sorted(mapping.tolist()) == list(range(k))   # a permutation
+
+
+def test_kaffpa_with_mapping():
+    part, mapping, qap = kaffpa_with_mapping(GRID, "2:2", "1:10", 0.03,
+                                             "fast", seed=1)
+    assert sorted(np.unique(part).tolist()) == [0, 1, 2, 3]
+    assert qap >= 0
+
+
+def test_reductions_dynamic_graph():
+    # a path graph fully reduces through degree-2 elimination
+    n = 20
+    path = Graph.from_edges(n, np.arange(n - 1), np.arange(1, n))
+    kernel, ids, prefix, follow = apply_reductions(path, (0, 3, 4))
+    assert kernel.n <= 4
+
+
+def test_nd_is_permutation_and_beats_natural_on_3d():
+    g = grid3d(6, 6, 6)
+    order = fast_reduced_nd(g, seed=1)
+    assert sorted(order.tolist()) == list(range(g.n))
+    assert fill_in(g, order) < fill_in(g, np.arange(g.n))
+
+
+def test_exact_solver_optimal_on_cycle():
+    # 8-cycle, k=2, eps=0: optimal cut is 2
+    n = 8
+    g = Graph.from_edges(n, np.arange(n), (np.arange(n) + 1) % n)
+    part = ilp_exact(g, 2, 0.0, timeout=30, seed=1)
+    assert edge_cut(g, part) == 2
+
+
+def test_ilp_improve_never_worsens():
+    part = kaffpa(GRID, 4, 0.03, "fast", seed=11)
+    out = ilp_improve(GRID, part, 4, timeout=15, seed=1)
+    assert edge_cut(GRID, out) <= edge_cut(GRID, part)
+
+
+def test_library_interface_kaffpa():
+    g = GRID
+    cut, part = api.kaffpa(g.n, None, g.xadj, None, g.adjncy, 2, 0.03,
+                           seed=1, mode=api.FAST)
+    assert cut == edge_cut(g, part)
+    n_sep, sep = api.node_separator(g.n, None, g.xadj, None, g.adjncy, 2,
+                                    0.2, seed=1, mode=api.FAST)
+    assert n_sep == len(sep)
+    ordering = api.fast_reduced_nd(g.n, g.xadj, g.adjncy, seed=1)
+    assert sorted(ordering.tolist()) == list(range(g.n))

@@ -1,0 +1,141 @@
+"""Training loop, checkpoint/restart, fault tolerance, serving."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models import transformer as T
+from repro.train.checkpoint import latest_step, restore, save
+from repro.train.data import DataConfig, batches, synthetic_tokens
+from repro.train.fault import Watchdog, run_resilient
+from repro.train.optimizer import OptConfig, schedule_lr
+from repro.train.pipeline import partition_layers
+from repro.train.train_step import init_opt_state, make_train_step
+
+CFG = get_config("minicpm_2b").reduced()
+OPT = OptConfig(peak_lr=2e-3, warmup_steps=5, stable_steps=60, decay_steps=10)
+DC = DataConfig(vocab=CFG.vocab, seq_len=24, global_batch=8)
+
+
+@pytest.fixture(scope="module")
+def step_fn():
+    return jax.jit(make_train_step(CFG, OPT, remat="full"))
+
+
+def test_loss_falls(step_fn):
+    params = T.init_params(CFG, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    it = batches(DC)
+    losses = []
+    for _ in range(40):
+        params, opt, m = step_fn(params, opt, next(it))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.4, losses[::10]
+
+
+def test_wsd_schedule_shape():
+    lrs = [float(schedule_lr(OPT, jnp.int32(s))) for s in range(90)]
+    assert lrs[2] < lrs[10]                     # warmup
+    assert abs(lrs[30] - OPT.peak_lr) < 1e-9    # stable plateau
+    assert lrs[-1] < 0.3 * OPT.peak_lr          # sharp decay
+
+
+def test_data_determinism_and_sharding():
+    a = synthetic_tokens(3, 0, 2, DC)
+    b = synthetic_tokens(3, 0, 2, DC)
+    c = synthetic_tokens(3, 1, 2, DC)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert a.shape == (DC.global_batch // 2, DC.seq_len + 1)
+
+
+def test_checkpoint_atomic_roundtrip(tmp_path, step_fn):
+    params = T.init_params(CFG, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    d = str(tmp_path / "ck")
+    save(d, 5, (params, opt))
+    save(d, 10, (params, opt))
+    assert latest_step(d) == 10
+    (p2, o2), manifest = restore(d, (params, opt))
+    assert manifest["step"] == 10
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # structure mismatch refused
+    with pytest.raises(ValueError):
+        restore(d, (params,))
+
+
+def test_fault_injection_restart_reproduces(tmp_path, step_fn):
+    data_fn = lambda start: batches(DC, start_step=start)  # noqa: E731
+    p0 = T.init_params(CFG, jax.random.PRNGKey(0))
+    pA, _, info = run_resilient(step_fn, p0, init_opt_state(p0), data_fn,
+                                15, str(tmp_path / "a"), ckpt_every=5,
+                                fail_at=8)
+    assert info["restarts"] == 1
+    p1 = T.init_params(CFG, jax.random.PRNGKey(0))
+    pB, _, _ = run_resilient(step_fn, p1, init_opt_state(p1), data_fn,
+                             15, str(tmp_path / "b"), ckpt_every=5)
+    for a, b in zip(jax.tree.leaves(pA), jax.tree.leaves(pB)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_watchdog_flags_stragglers():
+    wd = Watchdog(straggler_factor=2.0)
+    for _ in range(10):
+        wd.observe(0.1)
+    assert wd.observe(0.5)
+    assert not wd.observe(0.11)
+
+
+def test_grad_compression_error_feedback():
+    from repro.train.train_step import _compress_int8
+    g = jnp.asarray(np.random.default_rng(0).standard_normal(1000),
+                    jnp.float32)
+    err = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    # over steps, error feedback keeps the running sum unbiased
+    for _ in range(20):
+        deq, err = _compress_int8(g, err)
+        total = total + deq
+    np.testing.assert_allclose(np.asarray(total / 20), np.asarray(g),
+                               atol=0.05)
+
+
+def test_pipeline_partition_balanced():
+    stage = partition_layers(get_config("mistral_large_123b"), 8)
+    sizes = np.bincount(stage, minlength=8)
+    assert sizes.max() - sizes.min() <= 1
+    # contiguity
+    assert np.all(np.diff(stage) >= 0)
+
+
+def test_serving_continuous_batching():
+    from repro.serve.batching import serve_requests
+    cfg = get_config("minicpm_2b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [1], [2, 3]]
+    reqs = serve_requests(params, cfg, prompts, batch_slots=2, max_len=32,
+                          max_new=4)
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 4 for r in reqs)
+    assert all(0 <= t < cfg.vocab_pad for r in reqs for t in r.out)
+
+
+def test_prefill_then_decode():
+    from repro.serve.serve_step import prefill_step, decode_step
+    cfg = get_config("gemma2_9b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    caches = T.init_caches(cfg, B, S + 4)
+    last, caches = prefill_step(params, cfg, tokens, caches)
+    lg, caches = decode_step(params, cfg,
+                             jnp.argmax(last, -1)[:, None].astype(jnp.int32),
+                             caches, jnp.int32(S))
+    assert lg.shape == (B, cfg.vocab_pad)
+    # must equal the full-forward logits at the same position
+    full, _ = T.forward(params, cfg, jnp.concatenate(
+        [tokens, jnp.argmax(last, -1)[:, None].astype(jnp.int32)], axis=1))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
