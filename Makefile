@@ -1,0 +1,17 @@
+# Convenience targets; `make verify` is the tier-1 gate from ROADMAP.md.
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: verify test bench example-hypergraph
+
+verify:
+	$(PY) -m pytest -x -q
+
+test:
+	$(PY) -m pytest -q
+
+bench:
+	$(PY) benchmarks/run.py
+
+example-hypergraph:
+	$(PY) examples/hypergraph_partition.py

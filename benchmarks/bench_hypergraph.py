@@ -1,0 +1,52 @@
+"""Hypergraph partitioning benchmarks: kahypar presets vs the classical
+star-expansion-through-kaffpa baseline and random assignment.
+
+Rows report wall-clock and the connectivity (λ−1) objective (cut-net for
+the cut rows) on planted and uniform-random instances.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core.hypergraph import (connectivity, cut_net, is_feasible,
+                                   kahypar, star_expansion)
+from repro.core.hypergraph.initial import random_partition
+from repro.core.kaffpa import kaffpa
+from repro.io.generators import planted_hypergraph, random_hypergraph
+
+
+def instances():
+    return {
+        "hplant2k": planted_hypergraph(2048, 3072, blocks=8, seed=1),
+        "hrand1k": random_hypergraph(1024, 1536, seed=1),
+    }
+
+
+def star_baseline(hg, k: int, eps: float, seed: int) -> np.ndarray:
+    """Partition the star expansion with kaffpa; read off real vertices."""
+    g = star_expansion(hg)
+    part = kaffpa(g, k, eps, "eco", seed=seed)
+    return part[:hg.n]
+
+
+def bench_kahypar(k: int = 8):
+    for name, hg in instances().items():
+        p_rand = random_partition(hg, k, seed=0)
+        row(f"baseline_random/{name}/k{k}", 0, connectivity(hg, p_rand))
+        part, us = timed(star_baseline, hg, k, 0.03, 1)
+        row(f"baseline_star_kaffpa/{name}/k{k}", us, connectivity(hg, part))
+        for preset in ("fast", "eco"):
+            part, us = timed(kahypar, hg, k, 0.03, preset, 1)
+            assert is_feasible(hg, part, k, 0.03), (name, preset)
+            row(f"kahypar_{preset}/{name}/k{k}", us, connectivity(hg, part))
+        part, us = timed(kahypar, hg, k, 0.03, "eco", 1, "cut")
+        row(f"kahypar_eco_cut/{name}/k{k}", us, cut_net(hg, part))
+
+
+def main():
+    bench_kahypar(k=8)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,13 +7,16 @@ from __future__ import annotations
 
 
 def main() -> None:
-    from benchmarks import bench_partitioning, bench_tools, bench_kernels
+    from benchmarks import (bench_partitioning, bench_tools, bench_kernels,
+                            bench_hypergraph)
     print("name,us_per_call,derived")
     print("# --- kaffpa presets / kabape / kaffpaE / parhip (paper §2.1-2.5)")
     bench_partitioning.main()
     print("# --- separators / edge partitioning / ordering / mapping / ILP "
           "(paper §2.6-2.10)")
     bench_tools.main()
+    print("# --- hypergraph partitioning (kahypar vs star-expansion baseline)")
+    bench_hypergraph.main()
     print("# --- kernels (DESIGN.md §6)")
     bench_kernels.main()
     print("# --- roofline (from dry-run artifacts, if present)")

@@ -1,0 +1,29 @@
+"""Version-compatibility shims for the pinned container toolchain.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace around 0.4.35/0.5, and its replication-check kwarg was
+renamed ``check_rep`` -> ``check_vma`` along the way.  Import it from here so
+every call site works on both sides of the move, using the new-style
+``check_vma`` spelling.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:                                    # jax >= 0.5-ish
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:                     # older: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f=None, **kwargs):
+    """``jax.shard_map`` with the kwarg spelling the local jax understands."""
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    if f is None:                       # decorator-style partial application
+        return lambda fn: _shard_map(fn, **kwargs)
+    return _shard_map(f, **kwargs)

@@ -1,0 +1,34 @@
+"""Multilevel hypergraph partitioning (`repro.core.hypergraph`).
+
+The hypergraph sibling of the graph pipeline: dual-CSR `Hypergraph`
+container with padded ELL/COO device views, LP-clustering coarsening,
+greedy hypergraph growing, size-constrained LP refinement (cut-net and
+connectivity objectives, Pallas pin-affinity kernel on the hot path) and
+the `kahypar` multilevel driver.
+"""
+from repro.core.hypergraph.container import (EllHypergraph, Hypergraph,
+                                             HypergraphFormatError, PinCoo,
+                                             to_ell_h, to_pincoo)
+from repro.core.hypergraph.coarsen import (clique_expansion, contract,
+                                           coarsen_level, lp_clustering,
+                                           project, star_expansion)
+from repro.core.hypergraph.driver import (KahyparConfig, PRESETS, kahypar,
+                                          multilevel_hypergraph_partition)
+from repro.core.hypergraph.initial import greedy_growing, random_partition
+from repro.core.hypergraph.metrics import (balance, block_weights,
+                                           connectivity, cut_net, evaluate,
+                                           is_feasible, net_lambdas)
+from repro.core.hypergraph.refine import refine_hypergraph
+
+__all__ = [
+    "Hypergraph", "HypergraphFormatError", "EllHypergraph", "PinCoo",
+    "to_ell_h", "to_pincoo",
+    "clique_expansion", "star_expansion", "lp_clustering", "contract",
+    "coarsen_level", "project",
+    "greedy_growing", "random_partition",
+    "balance", "block_weights", "connectivity", "cut_net", "evaluate",
+    "is_feasible", "net_lambdas",
+    "refine_hypergraph",
+    "KahyparConfig", "PRESETS", "kahypar",
+    "multilevel_hypergraph_partition",
+]

@@ -1,0 +1,123 @@
+"""kahypar — the multilevel hypergraph partitioner driver.
+
+Mirrors the kaffpa multilevel loop (core/kaffpa.py): LP-clustering
+coarsening until ~stop_factor·k vertices remain, greedy hypergraph growing
+on the coarsest level, then size-constrained LP refinement at every level of
+the uncoarsening, optimizing cut-net or connectivity (λ−1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.hypergraph.container import Hypergraph, to_ell_h, to_pincoo
+from repro.core.hypergraph import coarsen as C
+from repro.core.hypergraph import initial as I
+from repro.core.hypergraph import metrics as M
+from repro.core.hypergraph.refine import refine_hypergraph
+
+
+@dataclasses.dataclass
+class KahyparConfig:
+    lp_iters: int = 8                   # clustering LP iterations per level
+    refine_rounds: int = 10
+    initial_tries: int = 4
+    contraction_stop_factor: int = 20   # stop coarsening at ~factor*k nodes
+    cluster_weight_factor: float = 3.0  # max cluster weight = W/(factor*k)
+    max_net_size: int = 64              # nets larger than this skip rating
+    use_kernel: bool = False            # Pallas pin-count path in refinement
+
+
+PRESETS = {
+    "fast":   KahyparConfig(refine_rounds=6, initial_tries=2),
+    "eco":    KahyparConfig(refine_rounds=10, initial_tries=4),
+    "strong": KahyparConfig(refine_rounds=16, initial_tries=8,
+                            contraction_stop_factor=30),
+}
+
+
+def _build_hierarchy(hg: Hypergraph, k: int, cfg: KahyparConfig, seed: int):
+    """levels = [(hg0, None), (hg1, cl0), ...]; cl maps fine → coarse ids."""
+    levels = [(hg, None)]
+    cur = hg
+    stop_n = max(cfg.contraction_stop_factor * k, 48)
+    lvl = 0
+    while cur.n > stop_n:
+        max_cw = max(1.0, cur.total_vwgt()
+                     / (cfg.cluster_weight_factor * k))
+        res = C.coarsen_level(cur, max_cw, seed + 31 * lvl,
+                              iters=cfg.lp_iters,
+                              max_net_size=cfg.max_net_size)
+        if res is None:
+            break
+        coarse, cl = res
+        levels.append((coarse, cl))
+        cur = coarse
+        lvl += 1
+    return levels
+
+
+def _refine_level(hg: Hypergraph, part: np.ndarray, k: int, eps: float,
+                  cfg: KahyparConfig, seed: int, objective: str,
+                  views=None) -> np.ndarray:
+    hc, ell = views if views is not None else (None, None)
+    force = not M.is_feasible(hg, part, k, eps)
+    return refine_hypergraph(hg, part, k, eps, rounds=cfg.refine_rounds,
+                             seed=seed, objective=objective,
+                             force_balance=force,
+                             use_kernel=cfg.use_kernel, hc=hc, ell=ell)
+
+
+def _initial_partition(hg: Hypergraph, k: int, eps: float,
+                       cfg: KahyparConfig, seed: int,
+                       objective: str) -> np.ndarray:
+    score = M.connectivity if objective == "km1" else M.cut_net
+    hc = to_pincoo(hg)
+    ell = to_ell_h(hg) if cfg.use_kernel else None
+    best, best_obj = None, np.inf
+    for t in range(cfg.initial_tries):
+        raw = I.greedy_growing(hg, k, seed=seed + 101 * t) if t % 2 == 0 \
+            else I.random_partition(hg, k, seed=seed + 101 * t)
+        part = _refine_level(hg, raw, k, eps, cfg, seed + t, objective,
+                             views=(hc, ell))
+        s = score(hg, part)
+        if s < best_obj and M.is_feasible(hg, part, k, eps):
+            best, best_obj = part, s
+        elif best is None:
+            best = part
+    return best
+
+
+def multilevel_hypergraph_partition(hg: Hypergraph, k: int, eps: float,
+                                    cfg: KahyparConfig, seed: int,
+                                    objective: str) -> np.ndarray:
+    levels = _build_hierarchy(hg, k, cfg, seed)
+    hg_c, _ = levels[-1]
+    part = _initial_partition(hg_c, k, eps, cfg, seed, objective)
+    for li in range(len(levels) - 1, 0, -1):
+        hg_fine, _ = levels[li - 1]
+        _, cl = levels[li]
+        part = C.project(part, cl)
+        part = _refine_level(hg_fine, part, k, eps, cfg, seed + li,
+                             objective)
+    return part
+
+
+def kahypar(hg: Hypergraph, k: int, eps: float = 0.03, preset: str = "eco",
+            seed: int = 0, objective: str = "km1",
+            input_partition: Optional[np.ndarray] = None) -> np.ndarray:
+    """The ``kahypar`` program: multilevel hypergraph partitioning.
+
+    ``objective`` ∈ {"km1", "cut"}; returns a block id per vertex.
+    """
+    if objective not in ("km1", "cut"):
+        raise ValueError(f"unknown objective {objective!r}")
+    cfg = PRESETS[preset]
+    if k <= 1:
+        return np.zeros(hg.n, dtype=np.int64)
+    if input_partition is not None:
+        part = np.asarray(input_partition, dtype=np.int64)
+        return _refine_level(hg, part, k, eps, cfg, seed, objective)
+    return multilevel_hypergraph_partition(hg, k, eps, cfg, seed, objective)

@@ -1,0 +1,158 @@
+"""Size-constrained LP uncoarsening refinement for hypergraphs — device side.
+
+Batch-synchronous k-way LP with exact move gains for both objectives:
+
+  * connectivity (λ−1):  moving v from a to b removes w(e) for every net
+    where v is a's sole pin, and adds w(e) for every net with no pin in b:
+       gain(v, b) = R(v) − W(v) + A(v, b)
+    with R(v) = Σ_{e∋v} w(e)·[cnt(e, a) = 1],  W(v) = Σ_{e∋v} w(e),
+    A(v, b) = Σ_{e∋v} w(e)·[cnt(e, b) ≥ 1]  — so argmax_b A is the best
+    target, exactly the pin-affinity the Pallas kernel computes.
+  * cut-net:  gain(v, b) = Σ_{e∋v} w(e)·[cnt(e, b) = |e|−1]
+                         − Σ_{e∋v} w(e)·[cnt(e, a) = |e|].
+
+Moves are applied with the same capped acceptance (hard balance guarantee)
+and undo-to-best semantics as the graph refiner (core/lp.py, core/refine.py).
+Per-net pin counts come either from the Pallas pin-affinity kernel (ELL
+path) or a COO scatter (oracle / CPU path); both views share pow2 padding so
+jit caches hit across multilevel levels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import lp as lp_mod
+from repro.core.hypergraph import metrics as M
+from repro.core.hypergraph.container import (EllHypergraph, Hypergraph,
+                                             PinCoo, to_ell_h, to_pincoo)
+
+_NEG = -1e30
+_NOISE = 1e-4
+_GAIN_EPS = 1e-3
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rounds", "objective",
+                                             "force_balance", "use_kernel"))
+def _hyper_refine_scan(hc: PinCoo, labels0: jax.Array, cap: jax.Array,
+                       key: jax.Array, k: int, rounds: int,
+                       objective: str, force_balance: bool,
+                       use_kernel: bool,
+                       ell: Optional[EllHypergraph] = None):
+    n = hc.n_pad
+    vw = hc.vwgt
+    w_pin = hc.mask * hc.netw[hc.pe]                      # (p_pad,)
+    wtot = jnp.zeros((n,), jnp.float32).at[hc.pv].add(w_pin)
+
+    if use_kernel and ell is not None:
+        from repro.kernels import ops as kops
+
+        def cnt_fn(labels):
+            cnt, _ = kops.pin_count(ell.pins, ell.pin_mask, ell.netw,
+                                    labels, k)
+            return cnt
+    else:
+        def cnt_fn(labels):
+            return M.pin_counts_device(hc, labels, k)
+
+    obj_fn = M.km1_device if objective == "km1" else M.cut_net_device
+
+    def gains(labels, cnt):
+        cnt_e = cnt[hc.pe]                                # (p_pad, k)
+        cnt_own = cnt_e[jnp.arange(hc.p_pad),
+                        labels[hc.pv].astype(jnp.int32)]  # (p_pad,)
+        if objective == "km1":
+            pres = (cnt_e > 0).astype(jnp.float32)
+            aff = jnp.zeros((n, k), jnp.float32).at[hc.pv].add(
+                w_pin[:, None] * pres)
+            rem = jnp.zeros((n,), jnp.float32).at[hc.pv].add(
+                w_pin * (cnt_own == 1))
+            return rem[:, None] - wtot[:, None] + aff
+        makes = (cnt_e == (hc.esize[hc.pe] - 1.0)[:, None])
+        joins = jnp.zeros((n, k), jnp.float32).at[hc.pv].add(
+            w_pin[:, None] * makes.astype(jnp.float32))
+        breaks = jnp.zeros((n,), jnp.float32).at[hc.pv].add(
+            w_pin * (cnt_own == hc.esize[hc.pe]))
+        return joins - breaks[:, None]
+
+    def body(carry, key_r):
+        labels, sizes, best_obj, best_labels, parity = carry
+        cnt = cnt_fn(labels)
+        # track best feasible state seen (undo-to-best)
+        obj = obj_fn(cnt, hc.netw)
+        feas = jnp.max(sizes - cap) <= 1e-6
+        better = feas & (obj < best_obj)
+        best_obj = jnp.where(better, obj, best_obj)
+        best_labels = jnp.where(better, labels, best_labels)
+        # propose + accept moves
+        gain = gains(labels, cnt)
+        gain = gain + jax.random.uniform(key_r, (n, k), jnp.float32,
+                                         0.0, _NOISE)
+        gain = gain.at[jnp.arange(n), labels].set(_NEG)
+        room = sizes[None, :] + vw[:, None] <= cap[None, :]
+        gain = jnp.where(room, gain, _NEG)
+        best_gain = jnp.max(gain, axis=1)
+        best_tgt = jnp.argmax(gain, axis=1).astype(labels.dtype)
+        want = best_gain > _GAIN_EPS
+        if force_balance:
+            over = sizes[labels] > cap[labels]
+            want = want | (over & (best_gain > _NEG / 2) & (vw > 0))
+        node_par = (jnp.arange(n) + parity) % 2 == 0
+        want = want & node_par
+        proposal = jnp.where(want, best_tgt, labels)
+        new_labels = lp_mod.capped_accept(labels, proposal, vw, sizes, cap,
+                                          jnp.where(want, best_gain, _NEG))
+        new_sizes = jnp.zeros((k,), jnp.float32).at[new_labels].add(vw)
+        return (new_labels, new_sizes, best_obj, best_labels,
+                parity + 1), obj
+
+    sizes0 = jnp.zeros((k,), jnp.float32).at[labels0].add(vw)
+    keys = jax.random.split(key, rounds)
+    carry0 = (labels0, sizes0, jnp.inf, labels0, jnp.int32(0))
+    (labels, sizes, best_obj, best_labels, _), _ = jax.lax.scan(
+        body, carry0, keys)
+    # evaluate the final state too
+    obj = obj_fn(cnt_fn(labels), hc.netw)
+    feas = jnp.max(sizes - cap) <= 1e-6
+    better = feas & (obj < best_obj)
+    best_obj = jnp.where(better, obj, best_obj)
+    best_labels = jnp.where(better, labels, best_labels)
+    have = jnp.isfinite(best_obj)
+    return jnp.where(have, best_labels, labels), best_obj
+
+
+def _caps_for(hg: Hypergraph, k: int, eps: float) -> np.ndarray:
+    lmax = np.ceil(hg.total_vwgt() / k)
+    return np.full(k, (1.0 + eps) * lmax)
+
+
+def refine_hypergraph(hg: Hypergraph, part: np.ndarray, k: int,
+                      eps: float = 0.03, rounds: int = 12, seed: int = 0,
+                      objective: str = "km1",
+                      force_balance: bool = False,
+                      use_kernel: bool = False,
+                      hc: Optional[PinCoo] = None,
+                      ell: Optional[EllHypergraph] = None) -> np.ndarray:
+    """Polish ``part``; never returns a worse feasible objective."""
+    if k <= 1 or hg.n == 0:
+        return np.asarray(part, dtype=np.int64)
+    hc = hc if hc is not None else to_pincoo(hg)
+    if use_kernel and ell is None:
+        ell = to_ell_h(hg)
+    cap = jnp.asarray(_caps_for(hg, k, eps), jnp.float32)
+    labels0 = np.zeros(hc.n_pad, dtype=np.int32)
+    labels0[:hg.n] = part
+    out, _ = _hyper_refine_scan(hc, jnp.asarray(labels0), cap,
+                                jax.random.PRNGKey(seed), k, rounds,
+                                objective, force_balance, use_kernel,
+                                ell=ell)
+    out = np.asarray(out, dtype=np.int64)[:hg.n]
+    score = M.connectivity if objective == "km1" else M.cut_net
+    # paranoia: keep the better of (in, out) among feasible options
+    if score(hg, out) <= score(hg, part) or force_balance:
+        return out
+    return np.asarray(part, dtype=np.int64)

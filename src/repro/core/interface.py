@@ -52,6 +52,27 @@ def kaffpa_balance_NE(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
     return edge_cut(g, part), part
 
 
+def kahypar(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
+            imbalance: float, suppress_output: bool = True, seed: int = 0,
+            mode: int = ECO, objective: str = "km1"):
+    """Hypergraph partitioner call (KaHyPar-style C API) → (objval, part).
+
+    ``eptr``/``eind`` are the hMETIS CSR arrays (m+1 offsets, pin ids);
+    ``vwgt``/``ewgt`` may be None.  ``objective`` ∈ {"km1", "cut"} selects
+    connectivity (λ−1) or cut-net; ``objval`` is the objective achieved.
+    """
+    from repro.core import hypergraph as H
+    hg = H.Hypergraph.from_arrays(
+        n, np.asarray(eptr), np.asarray(eind),
+        None if ewgt is None else np.asarray(ewgt),
+        None if vwgt is None else np.asarray(vwgt))
+    preset = _MODE_NAMES[mode].replace("social", "")   # no social split here
+    part = H.kahypar(hg, nparts, imbalance, preset, seed=seed,
+                     objective=objective)
+    score = H.connectivity if objective == "km1" else H.cut_net
+    return score(hg, part), part
+
+
 def node_separator(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
                    imbalance: float, suppress_output: bool = True,
                    seed: int = 0, mode: int = ECO):

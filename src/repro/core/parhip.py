@@ -25,7 +25,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.core.csr import Graph, _pow2_pad
 from repro.core import coarsen as C

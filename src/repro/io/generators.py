@@ -139,6 +139,66 @@ def weighted_grid(rows: int, cols: int, seed: int = 0, wmax: int = 10) -> Graph:
     return Graph(g.xadj, g.adjncy, g.vwgt, w_und[inv].astype(np.int64))
 
 
+# ---------------------------------------------------------------------------
+# hypergraph families (repro.core.hypergraph workloads)
+# ---------------------------------------------------------------------------
+
+def random_hypergraph(n: int, m: int, min_pins: int = 2, max_pins: int = 8,
+                      seed: int = 0, wmax: int = 1):
+    """Uniform random hypergraph: each net draws 2..max_pins distinct pins."""
+    from repro.core.hypergraph.container import Hypergraph
+    rng = np.random.default_rng(seed)
+    nets = []
+    for _ in range(m):
+        sz = int(rng.integers(min_pins, max_pins + 1))
+        nets.append(rng.choice(n, size=min(sz, n), replace=False))
+    ewgt = rng.integers(1, wmax + 1, size=m) if wmax > 1 else None
+    return Hypergraph.from_nets(n, nets, ewgt=ewgt)
+
+
+def planted_hypergraph(n: int, m: int, blocks: int = 4,
+                       p_cross: float = 0.1, min_pins: int = 2,
+                       max_pins: int = 8, seed: int = 0, wmax: int = 1):
+    """Planted-partition hypergraph: most nets draw all pins from one of
+    ``blocks`` ground-truth groups; a ``p_cross`` fraction spans the whole
+    vertex set.  The planted assignment is a near-optimal (λ−1) partition —
+    the standard quality benchmark for data-placement workloads."""
+    from repro.core.hypergraph.container import Hypergraph
+    rng = np.random.default_rng(seed)
+    home = np.arange(n) % blocks           # planted group of each vertex
+    members = [np.flatnonzero(home == b) for b in range(blocks)]
+    nets = []
+    for _ in range(m):
+        sz = int(rng.integers(min_pins, max_pins + 1))
+        if rng.random() < p_cross:
+            pool = np.arange(n)
+        else:
+            pool = members[int(rng.integers(0, blocks))]
+        nets.append(rng.choice(pool, size=min(sz, len(pool)), replace=False))
+    ewgt = rng.integers(1, wmax + 1, size=m) if wmax > 1 else None
+    return Hypergraph.from_nets(n, nets, ewgt=ewgt)
+
+
+def grid_hypergraph(rows: int, cols: int):
+    """Each 2×2 window of a grid becomes a 4-pin net — mesh-like, low λ."""
+    from repro.core.hypergraph.container import Hypergraph
+    idx = np.arange(rows * cols).reshape(rows, cols)
+    nets = []
+    for i in range(rows - 1):
+        for j in range(cols - 1):
+            nets.append([idx[i, j], idx[i, j + 1],
+                         idx[i + 1, j], idx[i + 1, j + 1]])
+    return Hypergraph.from_nets(rows * cols, nets)
+
+
+FAMILIES_H = {
+    "hrand": lambda seed=0: random_hypergraph(2048, 3072, seed=seed),
+    "hplant": lambda seed=0: planted_hypergraph(2048, 3072, blocks=8,
+                                                seed=seed),
+    "hgrid": lambda seed=0: grid_hypergraph(40, 40),
+}
+
+
 FAMILIES = {
     "grid2d": lambda seed=0: grid2d(64, 64),
     "grid3d": lambda seed=0: grid3d(16, 16, 16),

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import lp_affinity as _lpk
+from repro.kernels import pin_affinity as _pink
 from repro.kernels import ssd_scan as _ssdk
 from repro.kernels import ref as _ref
 
@@ -44,6 +45,45 @@ def lp_affinity(nbr: jax.Array, wgt: jax.Array, labels: jax.Array,
         wgt = jnp.pad(wgt, ((0, 0), (0, pad)))
     aff = _lpk.affinity_pallas(nbr_lab, wgt, k_pad, interpret=_interpret())
     return aff[:, :k]
+
+
+def pin_count(pins: jax.Array, pin_mask: jax.Array, netw: jax.Array,
+              labels: jax.Array, k: int, use_pallas: bool = True):
+    """Net→pin ELL + labels → ((e_pad, k) pin counts, weighted scores).
+
+    The pin-label gather runs in XLA (memory-bound); the one-hot contraction
+    and net-weight scaling run in the Pallas kernel (compute-bound).  Padded
+    pin slots carry pin_mask == 0 and contribute nothing.
+    """
+    pin_lab = labels[pins]                        # XLA gather
+    if not use_pallas:
+        cnt, score = _ref.pin_count_ref(pin_lab, pin_mask, netw, k)
+        return cnt, score
+    e_pad, pmax = pins.shape
+    k_pad = _round_up(k, _lpk.BK)
+    p_pad = _round_up(pmax, _lpk.DC)
+    if p_pad != pmax:
+        pad = p_pad - pmax
+        pin_lab = jnp.pad(pin_lab, ((0, 0), (0, pad)), constant_values=0)
+        pin_mask = jnp.pad(pin_mask, ((0, 0), (0, pad)))
+    cnt, score = _pink.pin_affinity_pallas(pin_lab, pin_mask, netw, k_pad,
+                                           interpret=_interpret())
+    return cnt[:, :k], score[:, :k]
+
+
+def pin_affinity(vnets: jax.Array, pins: jax.Array, pin_mask: jax.Array,
+                 netw: jax.Array, labels: jax.Array, k: int,
+                 use_pallas: bool = True) -> jax.Array:
+    """Dual-ELL hypergraph + labels → (n_pad, k) pin affinities:
+
+        aff[v, b] = Σ_{e ∋ v} w(e) · |{pins of e with label b}|
+
+    Per-net scores come from the Pallas kernel; the irregular vertex-side
+    accumulation is an XLA gather+sum over ``vnets`` rows (padding slots
+    point at a zero-weight net)."""
+    _, score = pin_count(pins, pin_mask, netw, labels, k,
+                         use_pallas=use_pallas)
+    return jnp.sum(score[vnets], axis=1)
 
 
 def ssd_scan(x: jax.Array, logdecay: jax.Array, b: jax.Array, c: jax.Array,

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: per-net pin-count histogram — the hot loop of
+hypergraph LP refinement and clustering (core/hypergraph/refine.py).
+
+Computes, for every net e and block b over the net→pin ELL layout:
+
+  cnt[e, b]   = Σ_j  mask[e, j] · [pin_lab[e, j] == b]      (pin count)
+  score[e, b] = w(e) · cnt[e, b]                            (weighted)
+
+The vertex-side pin affinity ``aff[v, b] = Σ_{e ∋ v} w(e)·|{u ∈ e :
+lab[u] = b}|`` is then one XLA gather+sum of ``score`` rows over the
+vertex→nets ELL (kernels/ops.py) — irregular gathers stay outside the
+kernel exactly as in lp_affinity.py.
+
+Same design as lp_affinity (128-row tiles, one-hot contraction on the VPU,
+dmax walked in chunks of DC); the differences are the per-row net-weight
+scaling fused into the kernel and the dual (cnt, score) output, which the
+refinement gain formulas both need (λ−1 gains want raw counts, absorption
+affinities want weighted scores).
+
+Grid: (e_pad/BN, k_pad/BK); net weights ride along as a (BN, 1) column.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.lp_affinity import BN, BK, DC
+
+
+def _pin_affinity_kernel(pin_lab_ref, mask_ref, netw_ref, cnt_ref, score_ref):
+    """One (BN nets × BK blocks) tile of (cnt, score)."""
+    j = pl.program_id(1)
+    lab = pin_lab_ref[...]          # (BN, pmax) int32
+    mask = mask_ref[...]            # (BN, pmax) f32
+    netw = netw_ref[...]            # (BN, 1) f32
+    pmax = lab.shape[1]
+    base = j * BK
+    kids = base + jax.lax.broadcasted_iota(jnp.int32, (1, 1, BK), 2)
+
+    def step(d, acc):
+        lab_c = jax.lax.dynamic_slice(lab, (0, d * DC), (BN, DC))
+        msk_c = jax.lax.dynamic_slice(mask, (0, d * DC), (BN, DC))
+        hit = (lab_c[:, :, None] == kids).astype(jnp.float32)  # (BN, DC, BK)
+        return acc + jnp.sum(hit * msk_c[:, :, None], axis=1)
+
+    cnt = jnp.zeros((BN, BK), jnp.float32)
+    cnt = jax.lax.fori_loop(0, pmax // DC, step, cnt)
+    cnt_ref[...] = cnt
+    score_ref[...] = cnt * netw
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "interpret"))
+def pin_affinity_pallas(pin_lab: jax.Array, mask: jax.Array,
+                        netw: jax.Array, k_pad: int,
+                        interpret: bool = False):
+    """(e_pad, pmax) pin labels/mask + (e_pad,) net weights →
+    ((e_pad, k_pad) counts, (e_pad, k_pad) weighted scores).
+
+    Requires e_pad % BN == 0, k_pad % BK == 0, pmax % DC == 0.
+    """
+    e_pad, pmax = pin_lab.shape
+    assert e_pad % BN == 0 and k_pad % BK == 0 and pmax % DC == 0, (
+        e_pad, k_pad, pmax)
+    grid = (e_pad // BN, k_pad // BK)
+    return pl.pallas_call(
+        _pin_affinity_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BN, pmax), lambda i, j: (i, 0)),
+            pl.BlockSpec((BN, pmax), lambda i, j: (i, 0)),
+            pl.BlockSpec((BN, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BN, BK), lambda i, j: (i, j)),
+            pl.BlockSpec((BN, BK), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e_pad, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((e_pad, k_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pin_lab, mask, netw.reshape(e_pad, 1))

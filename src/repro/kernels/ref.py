@@ -11,6 +11,28 @@ def affinity_ref(nbr_lab: jax.Array, wgt: jax.Array, k_pad: int) -> jax.Array:
     return jnp.einsum("nd,ndk->nk", wgt.astype(jnp.float32), hit)
 
 
+def pin_count_ref(pin_lab: jax.Array, mask: jax.Array, netw: jax.Array,
+                  k_pad: int):
+    """(cnt, score) oracle for the pin-affinity kernel.
+
+    cnt[e, b] = Σ_j mask[e, j]·[pin_lab[e, j] == b];  score = netw·cnt.
+    Counts are small integers in f32, so sums are exact and both outputs
+    match the Pallas kernel bit-for-bit (for integer-valued net weights).
+    """
+    hit = jax.nn.one_hot(pin_lab, k_pad, dtype=jnp.float32)   # (e, p, k)
+    cnt = jnp.einsum("ep,epk->ek", mask.astype(jnp.float32), hit)
+    return cnt, cnt * netw[:, None]
+
+
+def pin_affinity_ref(vnets: jax.Array, pin_lab: jax.Array, mask: jax.Array,
+                     netw: jax.Array, k_pad: int) -> jax.Array:
+    """aff[v, b] = Σ_{e ∈ vnets[v]} netw[e] · cnt[e, b]  — (n_pad, k_pad).
+
+    Padding slots of ``vnets`` point at a padding net (netw == 0)."""
+    _, score = pin_count_ref(pin_lab, mask, netw, k_pad)
+    return jnp.sum(score[vnets], axis=1)
+
+
 def ssd_scan_ref(x: jax.Array, logdecay: jax.Array, b: jax.Array,
                  c: jax.Array) -> jax.Array:
     """Exact sequential SSD recurrence.

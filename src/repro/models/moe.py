@@ -114,7 +114,7 @@ def moe_ffn_a2a(params, x, cfg):
     shard_map needs no resharding.
     """
     from repro.models import shardings as SH
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     mesh = SH.current_mesh()
     if mesh is None:

@@ -1,0 +1,205 @@
+"""Hypergraph subsystem: container, hMETIS IO, pin-affinity kernel,
+coarsening invariants, and the full kahypar multilevel driver."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.hypergraph import (Hypergraph, HypergraphFormatError,
+                                   clique_expansion, connectivity, contract,
+                                   cut_net, evaluate, is_feasible, kahypar,
+                                   net_lambdas, refine_hypergraph,
+                                   star_expansion, to_ell_h, to_pincoo)
+from repro.core.hypergraph import metrics as M
+from repro.core.hypergraph.initial import greedy_growing, random_partition
+from repro.io import hmetis
+from repro.io.generators import (grid_hypergraph, planted_hypergraph,
+                                 random_hypergraph)
+from repro.kernels import ops, ref
+
+
+# -- container / validation --------------------------------------------------
+
+def test_from_nets_dual_consistency():
+    hg = Hypergraph.from_nets(5, [[0, 1, 2], [2, 3], [3, 4, 0]])
+    assert hg.n == 5 and hg.m == 3 and hg.pins == 8
+    assert hg.check() == []
+    assert set(hg.incident_nets(0)) == {0, 2}
+    assert set(hg.net_pins(1)) == {2, 3}
+
+
+def test_checker_catches_errors():
+    good = Hypergraph.from_nets(4, [[0, 1], [2, 3]])
+    assert good.check() == []
+    # pin id out of range
+    bad = Hypergraph.from_nets(4, [[0, 1], [2, 3]])
+    bad.eind = bad.eind.copy()
+    bad.eind[0] = 7
+    assert any("out of range" in e for e in bad.check(raise_on_error=False))
+    # duplicate pin within a net
+    dup = Hypergraph.from_nets(4, [[0, 0, 1]], dedup_pins=False)
+    assert any("duplicate" in e for e in dup.check(raise_on_error=False))
+    with pytest.raises(HypergraphFormatError):
+        dup.check()
+    # inconsistent dual
+    skew = Hypergraph.from_nets(4, [[0, 1], [2, 3]])
+    skew.vedges = skew.vedges.copy()
+    skew.vedges[0] = 1
+    assert any("disagree" in e for e in skew.check(raise_on_error=False))
+    # non-positive net weight
+    wz = Hypergraph.from_nets(4, [[0, 1]], ewgt=[0])
+    assert any("net weight" in e for e in wz.check(raise_on_error=False))
+
+
+@pytest.mark.parametrize("gen", [
+    lambda: random_hypergraph(120, 180, seed=1, wmax=4),
+    lambda: planted_hypergraph(120, 180, blocks=4, seed=1),
+    lambda: grid_hypergraph(8, 8)])
+def test_hypergraph_generators_valid(gen):
+    hg = gen()
+    assert hg.check() == []
+    assert hg.n > 0 and hg.m > 0
+
+
+# -- hMETIS IO ---------------------------------------------------------------
+
+@pytest.mark.parametrize("weighted", [False, True])
+def test_hmetis_roundtrip(tmp_path, weighted):
+    hg = random_hypergraph(50, 70, seed=2, wmax=5 if weighted else 1)
+    if weighted:
+        hg.vwgt = np.random.default_rng(0).integers(1, 6, hg.n)
+    p = str(tmp_path / "h.hgr")
+    hmetis.write_hmetis(hg, p)
+    h2 = hmetis.read_hmetis(p)
+    assert np.array_equal(hg.eptr, h2.eptr)
+    assert np.array_equal(hg.eind, h2.eind)
+    assert np.array_equal(hg.ewgt, h2.ewgt)
+    assert np.array_equal(hg.vwgt, h2.vwgt)
+    assert hmetis.hypergraphchecker(p) == []
+
+
+def test_hmetis_rejects_malformed(tmp_path):
+    p = str(tmp_path / "bad.hgr")
+    with open(p, "w") as f:
+        f.write("2 3 1\n5 1 2\n")          # header says 2 nets, file has 1
+    assert hmetis.hypergraphchecker(p) != []
+
+
+# -- metrics -----------------------------------------------------------------
+
+def test_objectives_on_known_partition():
+    # nets: {0,1} internal, {0,2,3} spans 2 blocks, {2,3} internal to B1
+    hg = Hypergraph.from_nets(4, [[0, 1], [0, 2, 3], [2, 3]],
+                              ewgt=[1, 5, 2])
+    part = np.array([0, 0, 1, 1])
+    assert np.array_equal(net_lambdas(hg, part), [1, 2, 1])
+    assert cut_net(hg, part) == 5
+    assert connectivity(hg, part) == 5
+    # device versions agree
+    hc = to_pincoo(hg)
+    lab = np.zeros(hc.n_pad, dtype=np.int32)
+    lab[:4] = part
+    cnt = M.pin_counts_device(hc, jnp.asarray(lab), 2)
+    assert float(M.km1_device(cnt, hc.netw)) == 5.0
+    assert float(M.cut_net_device(cnt, hc.netw)) == 5.0
+
+
+# -- pin-affinity kernel -----------------------------------------------------
+
+@pytest.mark.parametrize("n,m,k", [(100, 150, 2), (300, 500, 5), (64, 90, 130)])
+def test_pin_affinity_kernel_bit_exact(n, m, k):
+    """Pallas kernel (interpret mode on CPU) vs jnp reference vs numpy."""
+    hg = random_hypergraph(n, m, seed=n + k, wmax=4)
+    ell = to_ell_h(hg)
+    rng = np.random.default_rng(k)
+    labels = jnp.asarray(rng.integers(0, k, ell.n_pad).astype(np.int32))
+    cnt, score = ops.pin_count(ell.pins, ell.pin_mask, ell.netw, labels, k)
+    cnt_r, score_r = ref.pin_count_ref(labels[ell.pins], ell.pin_mask,
+                                       ell.netw, k)
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_r))
+    np.testing.assert_array_equal(np.asarray(score), np.asarray(score_r))
+    aff = ops.pin_affinity(ell.vnets, ell.pins, ell.pin_mask, ell.netw,
+                           labels, k)
+    aff_r = ref.pin_affinity_ref(ell.vnets, labels[ell.pins], ell.pin_mask,
+                                 ell.netw, k)
+    np.testing.assert_array_equal(np.asarray(aff), np.asarray(aff_r))
+    # numpy brute force on the host container
+    lab_h = np.asarray(labels)
+    want = np.zeros((hg.n, k), dtype=np.float64)
+    for e in range(hg.m):
+        pins = hg.net_pins(e)
+        for b in range(k):
+            want[pins, b] += int(hg.ewgt[e]) * int((lab_h[pins] == b).sum())
+    np.testing.assert_array_equal(np.asarray(aff)[:hg.n], want)
+
+
+def test_refinement_kernel_path_matches_coo():
+    """Pallas pin counts plugged into LP refinement must be bit-identical
+    to the COO scatter path (same RNG stream)."""
+    hg = planted_hypergraph(200, 300, blocks=4, seed=7)
+    part0 = random_partition(hg, 4, seed=1)
+    a = refine_hypergraph(hg, part0, 4, rounds=6, seed=3, use_kernel=False)
+    b = refine_hypergraph(hg, part0, 4, rounds=6, seed=3, use_kernel=True)
+    assert np.array_equal(a, b)
+
+
+# -- coarsening --------------------------------------------------------------
+
+def test_contract_preserves_weight_and_objectives():
+    hg = planted_hypergraph(150, 220, blocks=4, seed=3, wmax=3)
+    clusters = np.arange(150) // 3          # triples of vertices merge
+    coarse, cl = contract(hg, clusters)
+    assert coarse.check() == []
+    assert coarse.total_vwgt() == hg.total_vwgt()
+    assert coarse.net_sizes().min() >= 2    # single-pin nets dropped
+    # any partition constant on clusters has identical objectives
+    rng = np.random.default_rng(0)
+    part_c = rng.integers(0, 3, coarse.n)
+    part_f = part_c[cl]
+    assert connectivity(coarse, part_c) == connectivity(hg, part_f)
+    assert cut_net(coarse, part_c) == cut_net(hg, part_f)
+
+
+def test_expansions_valid():
+    hg = random_hypergraph(60, 90, seed=4, wmax=3)
+    ce = clique_expansion(hg)
+    assert ce.check() == [] and ce.n == hg.n
+    se = star_expansion(hg)
+    assert se.check() == [] and se.n == hg.n + hg.m
+    assert se.m == hg.pins                  # one edge per pin
+
+
+# -- initial + driver --------------------------------------------------------
+
+def test_greedy_growing_covers_all_blocks():
+    hg = planted_hypergraph(120, 180, blocks=4, seed=9)
+    part = greedy_growing(hg, 4, seed=0)
+    assert set(np.unique(part)) == {0, 1, 2, 3}
+    assert M.balance(hg, part, 4) < 1.5     # roughly balanced by target
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_kahypar_end_to_end(k):
+    hg = planted_hypergraph(400, 600, blocks=4, seed=11)
+    part = kahypar(hg, k, 0.03, "eco", seed=1)
+    ev = evaluate(hg, part, k)
+    assert ev["feasible"], ev
+    rnd = connectivity(hg, random_partition(hg, k, seed=0))
+    assert ev["km1"] * 2 <= rnd, (ev, rnd)  # ≥2× better than random
+
+
+def test_kahypar_cut_objective():
+    hg = planted_hypergraph(300, 450, blocks=4, seed=13)
+    part = kahypar(hg, 4, 0.03, "fast", seed=2, objective="cut")
+    assert is_feasible(hg, part, 4, 0.03)
+    rnd = cut_net(hg, random_partition(hg, 4, seed=0))
+    assert cut_net(hg, part) < rnd
+
+
+def test_interface_kahypar():
+    from repro.core import interface
+    hg = planted_hypergraph(200, 300, blocks=4, seed=17)
+    objval, part = interface.kahypar(
+        hg.n, hg.m, None, None, hg.eptr, hg.eind, 4, 0.03, seed=1,
+        mode=interface.FAST)
+    assert objval == connectivity(hg, part)
+    assert is_feasible(hg, part, 4, 0.03)
