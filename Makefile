@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test bench example-hypergraph
+.PHONY: verify test bench bench-smoke example-hypergraph
 
 verify:
 	$(PY) -m pytest -x -q
@@ -12,6 +12,9 @@ test:
 
 bench:
 	$(PY) benchmarks/run.py
+
+bench-smoke:
+	$(PY) benchmarks/run.py --smoke
 
 example-hypergraph:
 	$(PY) examples/hypergraph_partition.py

@@ -1,0 +1,83 @@
+"""End-to-end engine benchmark → ``BENCH_engine.json``.
+
+Times the engine-backed drivers (kaffpa / kahypar) on the fixed seeded
+instances the engine-parity test pins, and records wall-clock plus the
+achieved objective so the perf trajectory is tracked across PRs.  Invoked
+by ``python benchmarks/run.py --smoke`` (CI) or directly.
+
+The ``pre_refactor`` block stores the PR-2 measurements of the pre-engine
+drivers on this container (same instances/seeds) for comparison.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+
+# PR-2 baseline: the duplicated kaffpa/kahypar loops before the shared
+# engine landed, measured on the same instances/seeds in this container.
+PRE_REFACTOR = {
+    "kaffpa_eco_grid32_k4": {"s": 8.46, "cut": 92},
+    "kaffpa_strong_grid32_k4": {"s": 10.18, "cut": 89},
+    "kaffpa_ecosocial_ba2k_k8": {"s": 11.20, "cut": 4561},
+    "kahypar_eco_hp400_k4": {"s": 4.50, "km1": 106},
+    "kahypar_eco_hp400_k2": {"s": 6.58, "km1": 49},
+}
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def collect() -> dict:
+    from repro.core.kaffpa import kaffpa
+    from repro.core.partition import edge_cut, is_feasible
+    from repro.core.hypergraph import connectivity, kahypar
+    from repro.core.hypergraph import metrics as HM
+    from repro.io.generators import (barabasi_albert, grid2d,
+                                     planted_hypergraph)
+
+    g32 = grid2d(32, 32)
+    ba = barabasi_albert(2048, 4, seed=1)
+    hp = planted_hypergraph(400, 600, blocks=4, seed=11)
+    res = {}
+
+    part, dt = _timed(kaffpa, g32, 4, 0.03, "eco", 3)
+    res["kaffpa_eco_grid32_k4"] = {
+        "s": round(dt, 2), "cut": edge_cut(g32, part),
+        "feasible": is_feasible(g32, part, 4, 0.03)}
+    part, dt = _timed(kaffpa, g32, 4, 0.03, "strong", 3)
+    res["kaffpa_strong_grid32_k4"] = {
+        "s": round(dt, 2), "cut": edge_cut(g32, part),
+        "feasible": is_feasible(g32, part, 4, 0.03)}
+    part, dt = _timed(kaffpa, ba, 8, 0.03, "ecosocial", 1)
+    res["kaffpa_ecosocial_ba2k_k8"] = {
+        "s": round(dt, 2), "cut": edge_cut(ba, part),
+        "feasible": is_feasible(ba, part, 8, 0.03)}
+    part, dt = _timed(kahypar, hp, 4, 0.03, "eco", 1)
+    res["kahypar_eco_hp400_k4"] = {
+        "s": round(dt, 2), "km1": connectivity(hp, part),
+        "feasible": HM.is_feasible(hp, part, 4, 0.03)}
+    part, dt = _timed(kahypar, hp, 2, 0.03, "eco", 1)
+    res["kahypar_eco_hp400_k2"] = {
+        "s": round(dt, 2), "km1": connectivity(hp, part),
+        "feasible": HM.is_feasible(hp, part, 2, 0.03)}
+    return res
+
+
+def main(out_path: str = "BENCH_engine.json") -> dict:
+    engine = collect()
+    report = {"engine": engine, "pre_refactor": PRE_REFACTOR}
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    for name, cell in engine.items():
+        base = PRE_REFACTOR.get(name, {})
+        print(f"{name}: {cell} (pre-refactor: {base})", flush=True)
+    print(f"wrote {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -2,8 +2,18 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Roofline tables (deliverable
 g) are produced by ``benchmarks/roofline.py`` from the dry-run artifacts.
+
+``python benchmarks/run.py --smoke`` runs only the end-to-end engine
+benchmark and writes ``BENCH_engine.json`` (the CI perf-trajectory record).
 """
 from __future__ import annotations
+
+import sys
+
+
+def smoke() -> None:
+    from benchmarks import bench_engine
+    bench_engine.main()
 
 
 def main() -> None:
@@ -35,4 +45,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        main()

@@ -6,9 +6,10 @@ Island model: every island keeps a population of partitions and applies
 Combine (the paper's key operator): coarsening is modified so that no cut
 edge of either parent is contracted — both parents stay representable at the
 coarsest level, the better parent seeds the initial partition, and refinement
-(which never worsens) assembles good parts of both.  Clusters are split by
-the parents' block signatures before contraction, which *guarantees* the
-invariant (DESIGN.md §2).
+(which never worsens) assembles good parts of both.  The shared multilevel
+engine implements this medium-generically (core/multilevel.py): clusters are
+split by the parents' block signatures before contraction, which
+*guarantees* the invariant (DESIGN.md §2/§7).
 
 The MPI rumor-spreading exchange is modelled by the island topology: after
 every generation each island pushes its best individual to a uniformly
@@ -25,9 +26,8 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.csr import Graph
-from repro.core import coarsen as C
 from repro.core import kaffpa as K
-from repro.core import refine as R
+from repro.core import multilevel as ML
 from repro.core.partition import edge_cut, is_feasible, comm_volume
 from repro.core.kabape import kabape_refine
 
@@ -53,50 +53,9 @@ def combine(g: Graph, pa: np.ndarray, pb: np.ndarray, k: int, eps: float,
     stresses this flexibility) — only ``pa`` must be a feasible k-partition.
     The offspring never has a worse cut than the better *valid* parent: the
     better one seeds the protected coarsest level and refinement never
-    worsens.
+    worsens.  Delegates to the shared engine's medium-generic combine.
     """
-    if pb.max() < k and edge_cut(g, pb) < edge_cut(g, pa):
-        pa, pb = pb, pa              # seed from the better valid parent
-    src = g.edge_sources()
-    forbidden = (pa[src] != pa[g.adjncy]) | (pb[src] != pb[g.adjncy])
-    # build a protected hierarchy; split every cluster by (pa, pb) signature
-    levels = [(g, None)]
-    cur, cur_pa, cur_pb = g, pa, pb
-    stop_n = max(cfg.contraction_stop_factor * k, 64)
-    lvl = 0
-    cur_forbidden = forbidden
-    while cur.n > stop_n:
-        max_cw = max(1.0, cur.total_vwgt() / (cfg.cluster_weight_factor * k))
-        mode = "lp" if cfg.coarsening == "lp" else "matching"
-        if mode == "matching":
-            clusters = C.heavy_edge_matching(cur, seed=seed + 31 * lvl,
-                                             max_cluster_weight=max_cw,
-                                             forbidden=cur_forbidden)
-        else:
-            clusters = C.lp_clustering(cur, max_cw, seed=seed + 31 * lvl,
-                                       forbidden=cur_forbidden)
-        # split clusters by parent signatures → parents stay representable
-        sig = clusters * (k * k) + cur_pa * k + cur_pb
-        coarse, cl = C.contract(cur, sig)
-        if coarse.n >= cur.n * 0.95:
-            break
-        levels.append((coarse, cl))
-        # push parents + forbidden mask to coarse level
-        nc = coarse.n
-        npa = np.zeros(nc, dtype=np.int64)
-        npb = np.zeros(nc, dtype=np.int64)
-        npa[cl] = cur_pa
-        npb[cl] = cur_pb
-        csrc = coarse.edge_sources()
-        cur_forbidden = ((npa[csrc] != npa[coarse.adjncy])
-                         | (npb[csrc] != npb[coarse.adjncy]))
-        cur, cur_pa, cur_pb = coarse, npa, npb
-        lvl += 1
-    # the better parent seeds the coarsest level
-    part_c = cur_pa
-    part_c = K._refine_level(levels[-1][0], part_c, k, eps, cfg, seed)
-    out = K._uncoarsen(levels, part_c, k, eps, cfg, seed)
-    return out
+    return ML.combine(K.GraphMedium(g, cfg), pa, pb, k, eps, seed)
 
 
 def mutate(g: Graph, part: np.ndarray, k: int, eps: float,
@@ -123,14 +82,16 @@ def kaffpaE(g: Graph, k: int, eps: float = 0.03, preset: str = "fast",
     rng = np.random.default_rng(seed)
     t0 = time.monotonic()
     fit = lambda p: _fitness(g, p, k, optimize_comm_volume)  # noqa: E731
+    # one medium for the whole evolution: level-0 device views are built
+    # once and shared across every multilevel restart / combine / V-cycle
+    medium = K.GraphMedium(g, cfg)
 
     islands: list[list[Individual]] = []
     pop0 = max(1, population // 2) if quickstart else population
     for isl in range(n_islands):
         pop = []
         for j in range(pop0):
-            p = K.multilevel_partition(g, k, eps, cfg,
-                                       seed + 1009 * isl + 31 * j)
+            p = ML.multilevel(medium, k, eps, seed + 1009 * isl + 31 * j)
             pop.append(Individual(p, fit(p)))
         islands.append(pop)
     if quickstart:
@@ -153,12 +114,12 @@ def kaffpaE(g: Graph, k: int, eps: float = 0.03, preset: str = "fast",
                 pa = min(pop[ia], pop[ib], key=lambda x: x.fitness)
                 others = [p for j, p in enumerate(pop) if j not in (ia, ib)]
                 pb = min(others, key=lambda x: x.fitness) if others else pa
-                child = combine(g, pa.part, pb.part, k, eps, cfg,
-                                seed + 7919 * gen + isl)
+                child = ML.combine(medium, pa.part, pb.part, k, eps,
+                                   seed + 7919 * gen + isl)
             else:
                 src = pop[int(rng.integers(len(pop)))]
-                child = mutate(g, src.part, k, eps, cfg,
-                               seed + 104729 * gen + isl)
+                child = ML.vcycle(medium, src.part, k, eps,
+                                  seed + 104729 * gen + isl)
             if enable_kabape:
                 child = kabape_refine(g, child, k, eps,
                                       internal_bal=kabaE_internal_bal,

@@ -12,7 +12,8 @@ from repro.core.hypergraph.container import (EllHypergraph, Hypergraph,
 from repro.core.hypergraph.coarsen import (clique_expansion, contract,
                                            coarsen_level, lp_clustering,
                                            project, star_expansion)
-from repro.core.hypergraph.driver import (KahyparConfig, PRESETS, kahypar,
+from repro.core.hypergraph.driver import (HypergraphMedium, KahyparConfig,
+                                          PRESETS, kahypar,
                                           multilevel_hypergraph_partition)
 from repro.core.hypergraph.initial import greedy_growing, random_partition
 from repro.core.hypergraph.metrics import (balance, block_weights,
@@ -29,6 +30,6 @@ __all__ = [
     "balance", "block_weights", "connectivity", "cut_net", "evaluate",
     "is_feasible", "net_lambdas",
     "refine_hypergraph",
-    "KahyparConfig", "PRESETS", "kahypar",
+    "HypergraphMedium", "KahyparConfig", "PRESETS", "kahypar",
     "multilevel_hypergraph_partition",
 ]

@@ -3,10 +3,11 @@ graph + contraction of both CSR sides.
 
 Clustering reuses the device LP machinery (core/lp.py) on a derived
 pairwise-rating graph: r(u, v) = Σ_{e ⊇ {u,v}} w(e) / (|e| − 1) — the
-heavy-edge rating the KaHyPar line uses.  Oversized nets are skipped during
-pair generation (they carry no clustering signal and would blow up the
-expansion quadratically), exactly the large-net filtering real hypergraph
-partitioners apply.
+heavy-edge rating the KaHyPar line uses.  Nets above ``max_net_size`` fall
+back to a star expansion (hub = first pin, one rating edge per remaining
+pin) instead of the full clique: linear cost instead of quadratic, but the
+net still contributes clustering signal rather than being skipped outright
+(ROADMAP large-net handling).
 
 Contraction maps pins through the cluster map, dedups pins within each net,
 drops single-pin nets (λ−1 ≡ 0) and merges parallel nets (identical pin
@@ -27,16 +28,30 @@ RATING_SCALE = 16          # fixed-point scale for w(e)/(|e|-1) int ratings
 
 
 def clique_expansion(hg: Hypergraph, max_net_size: int = 64,
-                     scale: int = RATING_SCALE) -> Graph:
-    """Pairwise heavy-edge rating graph (integer weights, ×``scale``)."""
+                     scale: int = RATING_SCALE,
+                     large_net_fallback: bool = True) -> Graph:
+    """Pairwise heavy-edge rating graph (integer weights, ×``scale``).
+
+    Nets with more than ``max_net_size`` pins are star-expanded around
+    their first pin (linear #edges) when ``large_net_fallback``; with the
+    fallback off they are skipped entirely (the pre-PR-2 behaviour).
+    """
     us, vs, ws = [], [], []
     esz = hg.net_sizes()
     for e in range(hg.m):
         sz = int(esz[e])
-        if sz < 2 or sz > max_net_size:
+        if sz < 2:
             continue
         pins = hg.net_pins(e)
         r = max(1, int(round(scale * int(hg.ewgt[e]) / (sz - 1))))
+        if sz > max_net_size:
+            if not large_net_fallback:
+                continue
+            # star fallback: hub = first pin, one edge per remaining pin
+            us.append(np.full(sz - 1, pins[0], dtype=np.int64))
+            vs.append(pins[1:])
+            ws.append(np.full(sz - 1, r, dtype=np.int64))
+            continue
         iu, iv = np.triu_indices(sz, k=1)
         us.append(pins[iu]); vs.append(pins[iv])
         ws.append(np.full(len(iu), r, dtype=np.int64))
@@ -61,11 +76,23 @@ def star_expansion(hg: Hypergraph) -> Graph:
 
 def lp_clustering(hg: Hypergraph, max_cluster_weight: float,
                   iters: int = 8, seed: int = 0,
-                  max_net_size: int = 64) -> np.ndarray:
-    """Size-constrained LP clustering on the clique-expansion rating."""
+                  max_net_size: int = 64,
+                  protect=None) -> np.ndarray:
+    """Size-constrained LP clustering on the clique-expansion rating.
+
+    ``protect`` is an optional sequence of partitions whose cuts must not
+    be contracted (V-cycle / combine re-coarsening): rating edges crossing
+    any protected cut are zeroed so the LP avoids them; the engine's
+    signature split removes any residual violation.
+    """
     g = clique_expansion(hg, max_net_size=max_net_size)
     if len(g.adjncy) == 0:
         return np.arange(hg.n, dtype=np.int64)
+    if protect:
+        from repro.core.multilevel import protect_cut_mask
+        cross = protect_cut_mask(g.edge_sources(), g.adjncy, protect)
+        g = Graph(g.xadj, g.adjncy, g.vwgt,
+                  np.where(cross, 0, g.adjwgt).astype(np.int64))
     return lp_mod.size_constrained_lp(g, max_cluster_weight, iters=iters,
                                       seed=seed)
 

@@ -1,22 +1,27 @@
 """kahypar — the multilevel hypergraph partitioner driver.
 
-Mirrors the kaffpa multilevel loop (core/kaffpa.py): LP-clustering
-coarsening until ~stop_factor·k vertices remain, greedy hypergraph growing
-on the coarsest level, then size-constrained LP refinement at every level of
-the uncoarsening, optimizing cut-net or connectivity (λ−1).
+Since PR 2 the multilevel loop lives in the shared engine
+(core/multilevel.py); this module provides the hypergraph `Medium` adapter
+and the ``kahypar`` program entry.  Riding on the engine, hypergraphs get
+cut-protected iterated V-cycles and ``time_limit`` restarts for free —
+both with the same non-worsening guarantees as the graph side — and the
+pin-COO / ELL-H device views are built once per hierarchy level and reused
+across refinement rounds, initial tries, V-cycles and restarts.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import multilevel as ML
 from repro.core.hypergraph.container import Hypergraph, to_ell_h, to_pincoo
 from repro.core.hypergraph import coarsen as C
 from repro.core.hypergraph import initial as I
 from repro.core.hypergraph import metrics as M
-from repro.core.hypergraph.refine import refine_hypergraph
+from repro.core.hypergraph.refine import (refine_hypergraph,
+                                          refine_hypergraph_batch)
 
 
 @dataclasses.dataclass
@@ -24,100 +29,134 @@ class KahyparConfig:
     lp_iters: int = 8                   # clustering LP iterations per level
     refine_rounds: int = 10
     initial_tries: int = 4
+    vcycles: int = 1                    # iterated multilevel cycles
     contraction_stop_factor: int = 20   # stop coarsening at ~factor*k nodes
     cluster_weight_factor: float = 3.0  # max cluster weight = W/(factor*k)
-    max_net_size: int = 64              # nets larger than this skip rating
-    use_kernel: bool = False            # Pallas pin-count path in refinement
+    max_net_size: int = 64              # larger nets use the star fallback
+    use_kernel: Optional[bool] = None   # None = Pallas on TPU, COO fallback
 
 
 PRESETS = {
     "fast":   KahyparConfig(refine_rounds=6, initial_tries=2),
     "eco":    KahyparConfig(refine_rounds=10, initial_tries=4),
     "strong": KahyparConfig(refine_rounds=16, initial_tries=8,
-                            contraction_stop_factor=30),
+                            contraction_stop_factor=30, vcycles=2),
 }
 
 
-def _build_hierarchy(hg: Hypergraph, k: int, cfg: KahyparConfig, seed: int):
-    """levels = [(hg0, None), (hg1, cl0), ...]; cl maps fine → coarse ids."""
-    levels = [(hg, None)]
-    cur = hg
-    stop_n = max(cfg.contraction_stop_factor * k, 48)
-    lvl = 0
-    while cur.n > stop_n:
-        max_cw = max(1.0, cur.total_vwgt()
-                     / (cfg.cluster_weight_factor * k))
-        res = C.coarsen_level(cur, max_cw, seed + 31 * lvl,
-                              iters=cfg.lp_iters,
-                              max_net_size=cfg.max_net_size)
-        if res is None:
-            break
-        coarse, cl = res
-        levels.append((coarse, cl))
-        cur = coarse
-        lvl += 1
-    return levels
+class HypergraphMedium(ML.ViewCache):
+    """The hypergraph adapter for the shared multilevel engine."""
 
+    def __init__(self, hg: Hypergraph, cfg: KahyparConfig,
+                 objective: str = "km1"):
+        if objective not in ("km1", "cut"):
+            raise ValueError(f"unknown objective {objective!r}")
+        from repro.core.refine import default_use_kernel
+        self.hg = hg
+        self.cfg = cfg
+        self.obj = objective
+        self.use_kernel = (default_use_kernel() if cfg.use_kernel is None
+                           else cfg.use_kernel)
 
-def _refine_level(hg: Hypergraph, part: np.ndarray, k: int, eps: float,
-                  cfg: KahyparConfig, seed: int, objective: str,
-                  views=None) -> np.ndarray:
-    hc, ell = views if views is not None else (None, None)
-    force = not M.is_feasible(hg, part, k, eps)
-    return refine_hypergraph(hg, part, k, eps, rounds=cfg.refine_rounds,
-                             seed=seed, objective=objective,
-                             force_balance=force,
-                             use_kernel=cfg.use_kernel, hc=hc, ell=ell)
+    # -- structure ---------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.hg.n
 
+    @property
+    def params(self) -> ML.EngineParams:
+        cfg = self.cfg
+        return ML.EngineParams(
+            initial_tries=cfg.initial_tries, vcycles=cfg.vcycles,
+            contraction_stop_factor=cfg.contraction_stop_factor,
+            cluster_weight_factor=cfg.cluster_weight_factor,
+            stop_n_floor=48)
 
-def _initial_partition(hg: Hypergraph, k: int, eps: float,
-                       cfg: KahyparConfig, seed: int,
-                       objective: str) -> np.ndarray:
-    score = M.connectivity if objective == "km1" else M.cut_net
-    hc = to_pincoo(hg)
-    ell = to_ell_h(hg) if cfg.use_kernel else None
-    best, best_obj = None, np.inf
-    for t in range(cfg.initial_tries):
-        raw = I.greedy_growing(hg, k, seed=seed + 101 * t) if t % 2 == 0 \
-            else I.random_partition(hg, k, seed=seed + 101 * t)
-        part = _refine_level(hg, raw, k, eps, cfg, seed + t, objective,
-                             views=(hc, ell))
-        s = score(hg, part)
-        if s < best_obj and M.is_feasible(hg, part, k, eps):
-            best, best_obj = part, s
-        elif best is None:
-            best = part
-    return best
+    def total_vwgt(self) -> int:
+        return self.hg.total_vwgt()
+
+    def cluster(self, max_cluster_weight: float, seed: int,
+                protect: Optional[Sequence[np.ndarray]] = None) -> np.ndarray:
+        return C.lp_clustering(self.hg, max_cluster_weight,
+                               iters=self.cfg.lp_iters, seed=seed,
+                               max_net_size=self.cfg.max_net_size,
+                               protect=protect)
+
+    def contract(self, clusters: np.ndarray):
+        coarse, cl = C.contract(self.hg, clusters)
+        return HypergraphMedium(coarse, self.cfg, self.obj), cl
+
+    # -- device views ------------------------------------------------------
+    def build_views(self):
+        hc = to_pincoo(self.hg)
+        ell = to_ell_h(self.hg) if self.use_kernel else None
+        return hc, ell
+
+    # -- refinement --------------------------------------------------------
+    def refine(self, part: np.ndarray, k: int, eps: float, seed: int,
+               force_balance: Optional[bool] = None) -> np.ndarray:
+        hc, ell = self.views
+        if force_balance is None:
+            force_balance = not M.is_feasible(self.hg, part, k, eps)
+        return refine_hypergraph(self.hg, part, k, eps,
+                                 rounds=self.cfg.refine_rounds, seed=seed,
+                                 objective=self.obj,
+                                 force_balance=force_balance,
+                                 use_kernel=self.use_kernel, hc=hc, ell=ell)
+
+    def refine_batch(self, parts: Sequence[np.ndarray], k: int, eps: float,
+                     seed: int) -> List[np.ndarray]:
+        hc, ell = self.views
+        return refine_hypergraph_batch(self.hg, list(parts), k, eps,
+                                       rounds=self.cfg.refine_rounds,
+                                       seed=seed, objective=self.obj,
+                                       use_kernel=self.use_kernel,
+                                       hc=hc, ell=ell)
+
+    def polish(self, part: np.ndarray, k: int, eps: float,
+               seed: int) -> np.ndarray:
+        return part
+
+    # -- initial partitioning ----------------------------------------------
+    def initial_candidates(self, k: int, eps: float,
+                           seed: int) -> List[np.ndarray]:
+        return [I.greedy_growing(self.hg, k, seed=seed + 101 * t)
+                if t % 2 == 0
+                else I.random_partition(self.hg, k, seed=seed + 101 * t)
+                for t in range(self.cfg.initial_tries)]
+
+    # -- objective ---------------------------------------------------------
+    def objective(self, part: np.ndarray) -> float:
+        score = M.connectivity if self.obj == "km1" else M.cut_net
+        return float(score(self.hg, part))
+
+    def is_feasible(self, part: np.ndarray, k: int, eps: float) -> bool:
+        return M.is_feasible(self.hg, part, k, eps)
 
 
 def multilevel_hypergraph_partition(hg: Hypergraph, k: int, eps: float,
                                     cfg: KahyparConfig, seed: int,
                                     objective: str) -> np.ndarray:
-    levels = _build_hierarchy(hg, k, cfg, seed)
-    hg_c, _ = levels[-1]
-    part = _initial_partition(hg_c, k, eps, cfg, seed, objective)
-    for li in range(len(levels) - 1, 0, -1):
-        hg_fine, _ = levels[li - 1]
-        _, cl = levels[li]
-        part = C.project(part, cl)
-        part = _refine_level(hg_fine, part, k, eps, cfg, seed + li,
-                             objective)
-    return part
+    return ML.multilevel(HypergraphMedium(hg, cfg, objective), k, eps, seed)
 
 
 def kahypar(hg: Hypergraph, k: int, eps: float = 0.03, preset: str = "eco",
             seed: int = 0, objective: str = "km1",
-            input_partition: Optional[np.ndarray] = None) -> np.ndarray:
+            input_partition: Optional[np.ndarray] = None,
+            vcycles: Optional[int] = None,
+            time_limit: float = 0.0) -> np.ndarray:
     """The ``kahypar`` program: multilevel hypergraph partitioning.
 
     ``objective`` ∈ {"km1", "cut"}; returns a block id per vertex.
+    ``vcycles`` overrides the preset's iterated-multilevel count and
+    ``time_limit`` enables repeated restarts under a wall-clock budget —
+    both engine features shared with kaffpa.
     """
     if objective not in ("km1", "cut"):
         raise ValueError(f"unknown objective {objective!r}")
     cfg = PRESETS[preset]
     if k <= 1:
         return np.zeros(hg.n, dtype=np.int64)
-    if input_partition is not None:
-        part = np.asarray(input_partition, dtype=np.int64)
-        return _refine_level(hg, part, k, eps, cfg, seed, objective)
-    return multilevel_hypergraph_partition(hg, k, eps, cfg, seed, objective)
+    medium = HypergraphMedium(hg, cfg, objective)
+    return ML.run(medium, k, eps, seed, vcycles=vcycles,
+                  time_limit=time_limit, input_partition=input_partition)

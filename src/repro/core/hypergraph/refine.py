@@ -37,10 +37,10 @@ _GAIN_EPS = 1e-3
 
 
 @functools.partial(jax.jit, static_argnames=("k", "rounds", "objective",
-                                             "force_balance", "use_kernel"))
+                                             "use_kernel"))
 def _hyper_refine_scan(hc: PinCoo, labels0: jax.Array, cap: jax.Array,
                        key: jax.Array, k: int, rounds: int,
-                       objective: str, force_balance: bool,
+                       objective: str, force_balance,
                        use_kernel: bool,
                        ell: Optional[EllHypergraph] = None):
     n = hc.n_pad
@@ -98,9 +98,10 @@ def _hyper_refine_scan(hc: PinCoo, labels0: jax.Array, cap: jax.Array,
         best_gain = jnp.max(gain, axis=1)
         best_tgt = jnp.argmax(gain, axis=1).astype(labels.dtype)
         want = best_gain > _GAIN_EPS
-        if force_balance:
-            over = sizes[labels] > cap[labels]
-            want = want | (over & (best_gain > _NEG / 2) & (vw > 0))
+        # overweight blocks push nodes out regardless of gain (when forced)
+        over = sizes[labels] > cap[labels]
+        want = want | (jnp.asarray(force_balance)
+                       & over & (best_gain > _NEG / 2) & (vw > 0))
         node_par = (jnp.arange(n) + parity) % 2 == 0
         want = want & node_par
         proposal = jnp.where(want, best_tgt, labels)
@@ -134,12 +135,18 @@ def refine_hypergraph(hg: Hypergraph, part: np.ndarray, k: int,
                       eps: float = 0.03, rounds: int = 12, seed: int = 0,
                       objective: str = "km1",
                       force_balance: bool = False,
-                      use_kernel: bool = False,
+                      use_kernel: Optional[bool] = None,
                       hc: Optional[PinCoo] = None,
                       ell: Optional[EllHypergraph] = None) -> np.ndarray:
-    """Polish ``part``; never returns a worse feasible objective."""
+    """Polish ``part``; never returns a worse feasible objective.
+
+    ``use_kernel=None`` resolves to the backend default (Pallas pin counts
+    on TPU, COO scatter elsewhere); ``hc``/``ell`` accept cached views.
+    """
     if k <= 1 or hg.n == 0:
         return np.asarray(part, dtype=np.int64)
+    from repro.core.refine import default_use_kernel
+    use_kernel = default_use_kernel() if use_kernel is None else use_kernel
     hc = hc if hc is not None else to_pincoo(hg)
     if use_kernel and ell is None:
         ell = to_ell_h(hg)
@@ -156,3 +163,51 @@ def refine_hypergraph(hg: Hypergraph, part: np.ndarray, k: int,
     if score(hg, out) <= score(hg, part) or force_balance:
         return out
     return np.asarray(part, dtype=np.int64)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rounds", "objective",
+                                             "use_kernel"))
+def _hyper_refine_scan_batch(hc: PinCoo, labels0: jax.Array, cap: jax.Array,
+                             keys: jax.Array, force: jax.Array, k: int,
+                             rounds: int, objective: str,
+                             use_kernel: bool,
+                             ell: Optional[EllHypergraph] = None):
+    def one(lab0, key, f):
+        return _hyper_refine_scan(hc, lab0, cap, key, k, rounds, objective,
+                                  f, use_kernel, ell=ell)
+    return jax.vmap(one)(labels0, keys, force)
+
+
+def refine_hypergraph_batch(hg: Hypergraph, parts: list, k: int,
+                            eps: float = 0.03, rounds: int = 12,
+                            seed: int = 0, objective: str = "km1",
+                            use_kernel: Optional[bool] = None,
+                            hc: Optional[PinCoo] = None,
+                            ell: Optional[EllHypergraph] = None) -> list:
+    """Refine several candidate partitions in one vmapped device call (the
+    initial-partition tournament shares a single compile)."""
+    if k <= 1 or hg.n == 0 or not parts:
+        return [np.asarray(p, dtype=np.int64) for p in parts]
+    from repro.core.refine import default_use_kernel
+    use_kernel = default_use_kernel() if use_kernel is None else use_kernel
+    hc = hc if hc is not None else to_pincoo(hg)
+    if use_kernel and ell is None:
+        ell = to_ell_h(hg)
+    cap = jnp.asarray(_caps_for(hg, k, eps), jnp.float32)
+    labs = np.zeros((len(parts), hc.n_pad), dtype=np.int32)
+    for i, p in enumerate(parts):
+        labs[i, :hg.n] = p
+    force = np.asarray([not M.is_feasible(hg, p, k, eps) for p in parts])
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(parts))
+    outs, _ = _hyper_refine_scan_batch(hc, jnp.asarray(labs), cap, keys,
+                                       jnp.asarray(force), k, rounds,
+                                       objective, use_kernel, ell=ell)
+    outs = np.asarray(outs, dtype=np.int64)[:, :hg.n]
+    score = M.connectivity if objective == "km1" else M.cut_net
+    result = []
+    for i, p in enumerate(parts):
+        if score(hg, outs[i]) <= score(hg, p) or force[i]:
+            result.append(outs[i])
+        else:
+            result.append(np.asarray(p, dtype=np.int64))
+    return result

@@ -54,12 +54,15 @@ def kaffpa_balance_NE(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
 
 def kahypar(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
             imbalance: float, suppress_output: bool = True, seed: int = 0,
-            mode: int = ECO, objective: str = "km1"):
+            mode: int = ECO, objective: str = "km1",
+            vcycles: Optional[int] = None, time_limit: float = 0.0):
     """Hypergraph partitioner call (KaHyPar-style C API) → (objval, part).
 
     ``eptr``/``eind`` are the hMETIS CSR arrays (m+1 offsets, pin ids);
     ``vwgt``/``ewgt`` may be None.  ``objective`` ∈ {"km1", "cut"} selects
     connectivity (λ−1) or cut-net; ``objval`` is the objective achieved.
+    ``vcycles``/``time_limit`` are the shared engine's iterated-multilevel
+    and restart-budget knobs (same semantics as the kaffpa entry).
     """
     from repro.core import hypergraph as H
     hg = H.Hypergraph.from_arrays(
@@ -68,7 +71,8 @@ def kahypar(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
         None if vwgt is None else np.asarray(vwgt))
     preset = _MODE_NAMES[mode].replace("social", "")   # no social split here
     part = H.kahypar(hg, nparts, imbalance, preset, seed=seed,
-                     objective=objective)
+                     objective=objective, vcycles=vcycles,
+                     time_limit=time_limit)
     score = H.connectivity if objective == "km1" else H.cut_net
     return score(hg, part), part
 

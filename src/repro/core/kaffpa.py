@@ -8,20 +8,27 @@ strongsocial} for social networks (size-constrained LP coarsening, §2.4).
 an iterated V-cycle with cut-edge-protected re-coarsening (§2.1, Walshaw
 iterated multilevel — quality is non-decreasing because refinement never
 worsens and protected coarsening keeps the current partition representable).
+
+Since PR 2 the multilevel loop itself lives in the shared engine
+(core/multilevel.py); this module provides the graph `Medium` adapter and
+the ``kaffpa`` program entry.  The engine owns per-level device views: the
+COO (and ELL, when the Pallas kernel path is active) views are built once
+per hierarchy level and reused across refinement rounds, initial tries,
+V-cycles and time-budget restarts.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.csr import Graph, to_coo
+from repro.core.csr import Graph, to_coo, to_ell
 from repro.core import coarsen as C
 from repro.core import initial as I
+from repro.core import multilevel as ML
 from repro.core import refine as R
-from repro.core.partition import edge_cut, is_feasible, block_weights
+from repro.core.partition import edge_cut, is_feasible
 
 
 @dataclasses.dataclass
@@ -36,6 +43,7 @@ class KaffpaConfig:
     vcycles: int = 1                    # iterated multilevel cycles
     contraction_stop_factor: int = 40   # stop coarsening at ~factor*k nodes
     cluster_weight_factor: float = 3.0  # max cluster weight = W/(factor*k)
+    use_kernel: Optional[bool] = None   # None = Pallas on TPU, COO fallback
 
 
 PRESETS = {
@@ -56,94 +64,115 @@ PRESETS = {
 }
 
 
-def _build_hierarchy(g: Graph, k: int, cfg: KaffpaConfig, seed: int,
-                     forbidden: Optional[np.ndarray] = None):
-    """Coarsen until ~contraction_stop_factor*k nodes; returns level list.
+class GraphMedium(ML.ViewCache):
+    """The graph adapter for the shared multilevel engine."""
 
-    levels = [(g0, None), (g1, cl0), ...] where cl maps level-i nodes to
-    level-(i+1) nodes.
-    """
-    levels = [(g, None)]
-    cur, cur_forbidden = g, forbidden
-    stop_n = max(cfg.contraction_stop_factor * k, 64)
-    lvl = 0
-    while cur.n > stop_n:
-        max_cw = max(1.0, cur.total_vwgt() / (cfg.cluster_weight_factor * k))
-        res = C.coarsen_level(cur, "lp" if cfg.coarsening == "lp" else "matching",
-                              max_cw, seed + 31 * lvl, forbidden=cur_forbidden)
-        if res is None:
-            break
-        coarse, cl = res
-        levels.append((coarse, cl))
-        if cur_forbidden is not None:
-            # push the protected-edge mask to the coarse level
-            src = coarse.edge_sources()
-            # recompute from scratch: an edge (cu, cv) is protected iff any
-            # protected fine edge maps onto it
-            fsrc = cur.edge_sources()
-            pko = cur_forbidden & (cl[fsrc] != cl[cur.adjncy])
-            prot_pairs = set(zip(cl[fsrc[pko]].tolist(),
-                                 cl[cur.adjncy[pko]].tolist()))
-            cur_forbidden = np.fromiter(
-                ((int(a), int(b)) in prot_pairs
-                 for a, b in zip(src, coarse.adjncy)),
-                dtype=bool, count=len(coarse.adjncy))
-        cur = coarse
-        lvl += 1
-    return levels
+    def __init__(self, g: Graph, cfg: KaffpaConfig):
+        self.g = g
+        self.cfg = cfg
+        self.use_kernel = (R.default_use_kernel() if cfg.use_kernel is None
+                           else cfg.use_kernel)
 
+    # -- structure ---------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.g.n
 
-def _uncoarsen(levels, part_coarse: np.ndarray, k: int, eps: float,
-               cfg: KaffpaConfig, seed: int) -> np.ndarray:
-    part = part_coarse
-    for li in range(len(levels) - 1, 0, -1):
-        g_fine, _ = levels[li - 1]
-        _, cl = levels[li]
-        part = C.project(part, cl)
-        part = _refine_level(g_fine, part, k, eps, cfg, seed + li)
-    return part
+    @property
+    def params(self) -> ML.EngineParams:
+        cfg = self.cfg
+        return ML.EngineParams(
+            initial_tries=cfg.initial_tries, vcycles=cfg.vcycles,
+            contraction_stop_factor=cfg.contraction_stop_factor,
+            cluster_weight_factor=cfg.cluster_weight_factor,
+            stop_n_floor=64)
 
+    def total_vwgt(self) -> int:
+        return self.g.total_vwgt()
 
-def _refine_level(g: Graph, part: np.ndarray, k: int, eps: float,
-                  cfg: KaffpaConfig, seed: int) -> np.ndarray:
-    coo = to_coo(g)
-    force = not is_feasible(g, part, k, eps)
-    part = R.refine_kway(g, part, k, eps, rounds=cfg.refine_rounds,
-                         seed=seed, coo=coo, force_balance=force)
-    if cfg.multi_try:
-        part = R.multi_try_refine(g, part, k, eps, tries=cfg.multi_try,
-                                  rounds=max(4, cfg.refine_rounds // 2),
-                                  seed=seed, coo=coo)
-    if cfg.use_flow and g.n <= cfg.flow_max_n and k <= 16:
-        part = R.flow_refine_all_pairs(g, part, k, eps, seed=seed)
-    return part
+    def cluster(self, max_cluster_weight: float, seed: int,
+                protect: Optional[Sequence[np.ndarray]] = None) -> np.ndarray:
+        g = self.g
+        forbidden = None
+        if protect:
+            forbidden = ML.protect_cut_mask(g.edge_sources(), g.adjncy,
+                                            protect)
+        if self.cfg.coarsening == "lp":
+            return C.lp_clustering(g, max_cluster_weight,
+                                   iters=self.cfg.lp_iters, seed=seed,
+                                   forbidden=forbidden)
+        return C.heavy_edge_matching(g, seed=seed,
+                                     max_cluster_weight=max_cluster_weight,
+                                     forbidden=forbidden)
 
+    def contract(self, clusters: np.ndarray):
+        coarse, cl = C.contract(self.g, clusters)
+        return GraphMedium(coarse, self.cfg), cl
 
-def _initial_partition(g: Graph, k: int, eps: float, cfg: KaffpaConfig,
-                       seed: int) -> np.ndarray:
-    def refine2(sub: Graph, two: np.ndarray, frac0: float) -> np.ndarray:
-        fr = np.asarray([frac0, 1.0 - frac0])
-        return R.refine_kway(sub, two, 2, eps, rounds=cfg.refine_rounds,
-                             seed=seed, fractions=fr)
-    best, best_cut = None, np.inf
-    for t in range(cfg.initial_tries):
-        part = I.recursive_bisection(g, k, seed=seed + 101 * t,
-                                     refine_fn=refine2 if g.n <= 20000 else None)
-        part = _refine_level(g, part, k, eps, cfg, seed + t)
-        c = edge_cut(g, part)
-        if c < best_cut and is_feasible(g, part, k, eps):
-            best, best_cut = part, c
-        elif best is None:
-            best = part
-    return best
+    # -- device views ------------------------------------------------------
+    def build_views(self):
+        coo = to_coo(self.g)
+        ell = to_ell(self.g, row_tile=coo.n_pad) if self.use_kernel else None
+        return coo, ell
+
+    # -- refinement --------------------------------------------------------
+    def refine(self, part: np.ndarray, k: int, eps: float, seed: int,
+               force_balance: Optional[bool] = None) -> np.ndarray:
+        g, cfg = self.g, self.cfg
+        coo, ell = self.views
+        if force_balance is None:
+            force_balance = not is_feasible(g, part, k, eps)
+        part = R.refine_kway(g, part, k, eps, rounds=cfg.refine_rounds,
+                             seed=seed, coo=coo, ell=ell,
+                             use_kernel=self.use_kernel,
+                             force_balance=force_balance)
+        return self.polish(part, k, eps, seed)
+
+    def refine_batch(self, parts: Sequence[np.ndarray], k: int, eps: float,
+                     seed: int) -> List[np.ndarray]:
+        coo, ell = self.views
+        return R.refine_kway_batch(self.g, list(parts), k, eps,
+                                   rounds=self.cfg.refine_rounds, seed=seed,
+                                   coo=coo, ell=ell,
+                                   use_kernel=self.use_kernel)
+
+    def polish(self, part: np.ndarray, k: int, eps: float,
+               seed: int) -> np.ndarray:
+        g, cfg = self.g, self.cfg
+        coo, _ = self.views
+        if cfg.multi_try:
+            part = R.multi_try_refine(g, part, k, eps, tries=cfg.multi_try,
+                                      rounds=max(4, cfg.refine_rounds // 2),
+                                      seed=seed, coo=coo)
+        if cfg.use_flow and g.n <= cfg.flow_max_n and k <= 16:
+            part = R.flow_refine_all_pairs(g, part, k, eps, seed=seed)
+        return part
+
+    # -- initial partitioning ----------------------------------------------
+    def initial_candidates(self, k: int, eps: float,
+                           seed: int) -> List[np.ndarray]:
+        g, cfg = self.g, self.cfg
+
+        def refine2(sub: Graph, two: np.ndarray, frac0: float) -> np.ndarray:
+            fr = np.asarray([frac0, 1.0 - frac0])
+            return R.refine_kway(sub, two, 2, eps, rounds=cfg.refine_rounds,
+                                 seed=seed, fractions=fr)
+
+        fn = refine2 if g.n <= 20000 else None
+        return [I.recursive_bisection(g, k, seed=seed + 101 * t, refine_fn=fn)
+                for t in range(cfg.initial_tries)]
+
+    # -- objective ---------------------------------------------------------
+    def objective(self, part: np.ndarray) -> float:
+        return float(edge_cut(self.g, part))
+
+    def is_feasible(self, part: np.ndarray, k: int, eps: float) -> bool:
+        return is_feasible(self.g, part, k, eps)
 
 
 def multilevel_partition(g: Graph, k: int, eps: float, cfg: KaffpaConfig,
                          seed: int) -> np.ndarray:
-    levels = _build_hierarchy(g, k, cfg, seed)
-    g_c, _ = levels[-1]
-    part_c = _initial_partition(g_c, k, eps, cfg, seed)
-    return _uncoarsen(levels, part_c, k, eps, cfg, seed)
+    return ML.multilevel(GraphMedium(g, cfg), k, eps, seed)
 
 
 def vcycle(g: Graph, part: np.ndarray, k: int, eps: float, cfg: KaffpaConfig,
@@ -151,23 +180,7 @@ def vcycle(g: Graph, part: np.ndarray, k: int, eps: float, cfg: KaffpaConfig,
     """Iterated multilevel: re-coarsen protecting the current partition's cut
     edges, use it as the coarsest initial partition, refine on the way up.
     Quality is non-decreasing (§2.1)."""
-    src = g.edge_sources()
-    forbidden = part[src] != part[g.adjncy]
-    levels = _build_hierarchy(g, k, cfg, seed, forbidden=forbidden)
-    # project the current partition down the protected hierarchy
-    part_c = part
-    for li in range(1, len(levels)):
-        _, cl = levels[li]
-        # all members of a cluster share a block (cut edges were protected)
-        nc = levels[li][0].n
-        pc = np.zeros(nc, dtype=np.int64)
-        pc[cl] = part_c
-        part_c = pc
-    part_c = _refine_level(levels[-1][0], part_c, k, eps, cfg, seed)
-    out = _uncoarsen(levels, part_c, k, eps, cfg, seed)
-    if edge_cut(g, out) <= edge_cut(g, part) and is_feasible(g, out, k, eps):
-        return out
-    return part
+    return ML.vcycle(GraphMedium(g, cfg), part, k, eps, seed)
 
 
 def kaffpa(g: Graph, k: int, eps: float = 0.03, preset: str = "eco",
@@ -181,22 +194,9 @@ def kaffpa(g: Graph, k: int, eps: float = 0.03, preset: str = "eco",
     cfg = PRESETS[preset]
     if k <= 1:
         return np.zeros(g.n, dtype=np.int64)
-    t0 = time.monotonic()
-    if input_partition is not None:
-        best = np.asarray(input_partition, dtype=np.int64)
-        best = _refine_level(g, best, k, eps, cfg, seed)
-    else:
-        best = multilevel_partition(g, k, eps, cfg, seed)
-    for cyc in range(1, cfg.vcycles):
-        best = vcycle(g, best, k, eps, cfg, seed + 7919 * cyc)
-    # repeated calls under a time budget (paper --time_limit)
-    trial = 1
-    while time_limit > 0 and time.monotonic() - t0 < time_limit:
-        cand = multilevel_partition(g, k, eps, cfg, seed + 104729 * trial)
-        if (edge_cut(g, cand) < edge_cut(g, best)
-                and is_feasible(g, cand, k, eps)):
-            best = cand
-        trial += 1
+    medium = GraphMedium(g, cfg)
+    best = ML.run(medium, k, eps, seed, time_limit=time_limit,
+                  input_partition=input_partition)
     if enforce_balance and not is_feasible(g, best, k, eps):
         best = R.refine_kway(g, best, k, eps, rounds=30, seed=seed,
                              force_balance=True)

@@ -75,9 +75,13 @@ def kway_affinity_coo(g: CooGraph, labels: jax.Array, k: int) -> jax.Array:
 def kway_lp_round(g: CooGraph, labels: jax.Array, sizes: jax.Array,
                   cap: jax.Array, key: jax.Array, k: int,
                   parity: jax.Array, active: Optional[jax.Array],
-                  allow_zero_gain: bool, force_balance: bool,
+                  allow_zero_gain: bool, force_balance,
                   affinity_fn=None) -> tuple:
-    """One batch-synchronous k-way LP/gain round; returns (labels, sizes)."""
+    """One batch-synchronous k-way LP/gain round; returns (labels, sizes).
+
+    ``force_balance`` may be a Python bool or a traced boolean scalar (the
+    batched tournament vmaps over it — candidates differ in feasibility).
+    """
     n = g.n_pad
     aff = (affinity_fn or kway_affinity_coo)(g, labels, k)
     noise = jax.random.uniform(key, (n, k), jnp.float32, 0.0, _NOISE)
@@ -93,10 +97,10 @@ def kway_lp_round(g: CooGraph, labels: jax.Array, sizes: jax.Array,
     best_tgt = jnp.argmax(gain, axis=1).astype(labels.dtype)
     thresh = -_GAIN_EPS if allow_zero_gain else _GAIN_EPS
     want = best_gain > thresh
-    if force_balance:
-        # overweight blocks push nodes out regardless of gain
-        over = sizes[labels] > cap[labels]
-        want = want | (over & (best_gain > _NEG / 2) & (vw > 0))
+    # overweight blocks push nodes out regardless of gain (when forced)
+    over = sizes[labels] > cap[labels]
+    want = want | (jnp.asarray(force_balance)
+                   & over & (best_gain > _NEG / 2) & (vw > 0))
     # parity tie-break (avoid A<->B swap oscillation)
     node_par = (jnp.arange(n) + parity) % 2 == 0
     want = want & node_par

@@ -1,0 +1,356 @@
+"""The unified device-resident multilevel engine (DESIGN.md §7).
+
+One driver serves every incidence medium: KaFFPa's programs (paper §2.1,
+§4.1) and the kahypar hypergraph driver are the *same* multilevel loop —
+build a hierarchy, run an initial-partition tournament on the coarsest
+level, uncoarsen with refinement, optionally iterate cut-protected V-cycles
+and time-budget restarts.  The medium-specific pieces (how to cluster, how
+to contract, which device views refinement consumes, which objective is
+optimized) live behind the `Medium` protocol; `GraphMedium`
+(core/kaffpa.py) and `HypergraphMedium` (core/hypergraph/driver.py) are the
+two adapters.  Future media (edge partitioning via the split graph, node
+separators) only need the same handful of methods.
+
+Device-view ownership: every `Medium` caches its padded device views
+(CooGraph/ELL, pin-COO/ELL-H) the first time refinement needs them, so each
+hierarchy level builds its views exactly once and reuses them across
+refinement rounds, initial-partition tries, V-cycles and restarts.  The
+module-level ``view_build_count()`` instruments this invariant — the
+regression test pins view construction to O(levels), not O(levels×rounds).
+
+Protected coarsening (V-cycles §2.1 / the KaFFPaE combine operator §2.2) is
+implemented once, medium-independently: `cluster` receives the partitions
+to protect (so it can avoid wasting merges across their cuts), and the
+engine then splits every cluster by the block signature of the protected
+partitions before contraction.  Signature splitting *guarantees* each
+cluster is constant on every protected partition, so the partitions remain
+exactly representable (and exactly evaluable) at every coarse level —
+regardless of the medium or the clustering heuristic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, List, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# view-construction instrumentation
+# ---------------------------------------------------------------------------
+
+_view_builds = 0
+
+
+def view_build_count() -> int:
+    """Total device-view constructions since process start / last reset."""
+    return _view_builds
+
+
+def reset_view_build_count() -> None:
+    global _view_builds
+    _view_builds = 0
+
+
+def _note_view_build() -> None:
+    global _view_builds
+    _view_builds += 1
+
+
+class ViewCache:
+    """Mixin: lazily build device views once per medium instance.
+
+    A medium lives exactly as long as its hierarchy level, so caching on the
+    instance makes view construction O(levels) for a multilevel run, and the
+    level-0 views survive across V-cycles and time-budget restarts (the same
+    top-level medium object is reused).
+    """
+
+    _views: Any = None
+
+    def build_views(self):  # pragma: no cover - overridden by adapters
+        raise NotImplementedError
+
+    @property
+    def views(self):
+        if self._views is None:
+            self._views = self.build_views()
+            _note_view_build()
+        return self._views
+
+
+# ---------------------------------------------------------------------------
+# the Medium protocol
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineParams:
+    """The medium-independent knobs the engine loop needs."""
+
+    initial_tries: int = 4
+    vcycles: int = 1                    # iterated multilevel cycles
+    contraction_stop_factor: int = 40   # stop coarsening at ~factor*k nodes
+    cluster_weight_factor: float = 3.0  # max cluster weight = W/(factor*k)
+    stop_n_floor: int = 64              # never coarsen below this many nodes
+    stall_factor: float = 0.95          # stop when a level shrinks < 5%
+
+
+@runtime_checkable
+class Medium(Protocol):
+    """What an incidence medium must expose to the multilevel engine.
+
+    Partitions are host int64 arrays of length ``n``; ``cl`` maps are host
+    int64 arrays mapping fine ids to coarse ids (projection is always
+    ``coarse_part[cl]``, so the engine owns it).
+    """
+
+    @property
+    def n(self) -> int: ...
+
+    @property
+    def params(self) -> EngineParams: ...
+
+    def total_vwgt(self) -> int: ...
+
+    def cluster(self, max_cluster_weight: float, seed: int,
+                protect: Optional[Sequence[np.ndarray]] = None) -> np.ndarray:
+        """Cluster ids per node (protected cuts should not be merged)."""
+        ...
+
+    def contract(self, clusters: np.ndarray) -> tuple["Medium", np.ndarray]:
+        """Contract clusters → (coarse medium, fine→coarse map)."""
+        ...
+
+    @property
+    def views(self) -> Any:
+        """Cached device views for refinement (built once per level)."""
+        ...
+
+    def refine(self, part: np.ndarray, k: int, eps: float, seed: int,
+               force_balance: Optional[bool] = None) -> np.ndarray:
+        """Full per-level refinement pipeline; never worsens a feasible
+        objective unless forced to restore balance."""
+        ...
+
+    def refine_batch(self, parts: Sequence[np.ndarray], k: int, eps: float,
+                     seed: int) -> List[np.ndarray]:
+        """Refine several candidates in one batched (vmapped) device call."""
+        ...
+
+    def polish(self, part: np.ndarray, k: int, eps: float,
+               seed: int) -> np.ndarray:
+        """Extra single-candidate polish for the tournament winner."""
+        ...
+
+    def initial_candidates(self, k: int, eps: float,
+                           seed: int) -> List[np.ndarray]:
+        """Raw initial partitions for the coarsest-level tournament."""
+        ...
+
+    def objective(self, part: np.ndarray) -> float: ...
+
+    def is_feasible(self, part: np.ndarray, k: int, eps: float) -> bool: ...
+
+
+# ---------------------------------------------------------------------------
+# hierarchy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Level:
+    """One hierarchy level: the medium, the map from the finer level, and
+    the protected partitions pushed down to this level (block-constant on
+    every cluster by construction)."""
+
+    medium: Medium
+    cl: Optional[np.ndarray]                 # None at level 0
+    protect: Optional[List[np.ndarray]] = None
+
+
+def _signature_split(clusters: np.ndarray,
+                     protect: Sequence[np.ndarray]) -> np.ndarray:
+    """Split clusters by the protected partitions' block signatures, making
+    every cluster constant on each protected partition.
+
+    Labels are compressed per partition before mixing, so a protected
+    "partition" may be any labelling (combine's ``pb`` can be an arbitrary
+    domain-specific clustering with labels ≥ k) without signature
+    collisions.
+    """
+    sig = np.asarray(clusters, dtype=np.int64)
+    for p in protect:
+        uniq, inv = np.unique(np.asarray(p, dtype=np.int64),
+                              return_inverse=True)
+        sig = sig * np.int64(len(uniq)) + inv
+    return sig
+
+
+def protect_cut_mask(src: np.ndarray, dst: np.ndarray,
+                     protect: Optional[Sequence[np.ndarray]]) -> np.ndarray:
+    """Directed-edge mask: True where any protected labelling is cut.
+
+    Shared by the media's ``cluster`` implementations (graph adjacency,
+    hypergraph rating-graph expansion) so the protection contract lives in
+    one place.
+    """
+    mask = np.zeros(len(src), dtype=bool)
+    for p in protect or ():
+        p = np.asarray(p, dtype=np.int64)
+        mask |= p[src] != p[dst]
+    return mask
+
+
+def build_hierarchy(medium: Medium, k: int, seed: int,
+                    protect: Optional[Sequence[np.ndarray]] = None
+                    ) -> List[Level]:
+    """Coarsen until ~contraction_stop_factor·k nodes remain.
+
+    With ``protect`` the hierarchy keeps every protected partition exactly
+    representable (signature splitting), and the pushed-down copies ride on
+    each `Level` so callers can seed the coarsest level from them.
+    """
+    p = medium.params
+    cur_protect = list(protect) if protect else None
+    levels = [Level(medium, None, cur_protect)]
+    cur = medium
+    stop_n = max(p.contraction_stop_factor * k, p.stop_n_floor)
+    lvl = 0
+    while cur.n > stop_n:
+        max_cw = max(1.0, cur.total_vwgt() / (p.cluster_weight_factor * k))
+        clusters = cur.cluster(max_cw, seed + 31 * lvl, protect=cur_protect)
+        if cur_protect:
+            clusters = _signature_split(clusters, cur_protect)
+        coarse, cl = cur.contract(clusters)
+        if coarse.n >= cur.n * p.stall_factor:
+            break
+        if cur_protect:
+            # clusters are block-constant → scatter projects exactly
+            pushed = []
+            for part in cur_protect:
+                pc = np.zeros(coarse.n, dtype=np.int64)
+                pc[cl] = part
+                pushed.append(pc)
+            cur_protect = pushed
+        levels.append(Level(coarse, cl, cur_protect))
+        cur = coarse
+        lvl += 1
+    return levels
+
+
+# ---------------------------------------------------------------------------
+# initial partitioning: batched tournament on the coarsest level
+# ---------------------------------------------------------------------------
+
+def initial_partition(level: Level, k: int, eps: float, seed: int
+                      ) -> np.ndarray:
+    """Tournament over ``initial_tries`` candidates.
+
+    All candidates are refined in ONE batched device call (vmap over seeds)
+    so the tournament shares a single compile; the winner gets the medium's
+    single-candidate polish (multi-try / flow on graphs).
+    """
+    medium = level.medium
+    cands = medium.initial_candidates(k, eps, seed)
+    refined = medium.refine_batch(cands, k, eps, seed)
+    best, best_obj = None, np.inf
+    for part in refined:
+        obj = medium.objective(part)
+        if obj < best_obj and medium.is_feasible(part, k, eps):
+            best, best_obj = part, obj
+        elif best is None:
+            best = part
+    return medium.polish(best, k, eps, seed)
+
+
+# ---------------------------------------------------------------------------
+# uncoarsening
+# ---------------------------------------------------------------------------
+
+def uncoarsen(levels: List[Level], part_coarse: np.ndarray, k: int,
+              eps: float, seed: int) -> np.ndarray:
+    part = np.asarray(part_coarse, dtype=np.int64)
+    for li in range(len(levels) - 1, 0, -1):
+        part = part[levels[li].cl]               # project to the finer level
+        part = levels[li - 1].medium.refine(part, k, eps, seed + li)
+    return part
+
+
+def multilevel(medium: Medium, k: int, eps: float, seed: int) -> np.ndarray:
+    """One full multilevel cycle: coarsen, tournament, uncoarsen-refine."""
+    levels = build_hierarchy(medium, k, seed)
+    part_c = initial_partition(levels[-1], k, eps, seed)
+    return uncoarsen(levels, part_c, k, eps, seed)
+
+
+# ---------------------------------------------------------------------------
+# iterated multilevel (V-cycles) and the evolutionary combine operator
+# ---------------------------------------------------------------------------
+
+def vcycle(medium: Medium, part: np.ndarray, k: int, eps: float,
+           seed: int) -> np.ndarray:
+    """Iterated multilevel: re-coarsen protecting the current partition's
+    cut, seed the coarsest level with it, refine on the way up.  The result
+    is accepted only if it does not worsen the objective (feasibly), so
+    quality is non-decreasing across cycles (paper §2.1, Walshaw)."""
+    part = np.asarray(part, dtype=np.int64)
+    levels = build_hierarchy(medium, k, seed, protect=[part])
+    coarsest = levels[-1]
+    part_c = coarsest.protect[0] if coarsest.protect is not None else part
+    part_c = coarsest.medium.refine(part_c, k, eps, seed)
+    out = uncoarsen(levels, part_c, k, eps, seed)
+    if (medium.objective(out) <= medium.objective(part)
+            and medium.is_feasible(out, k, eps)):
+        return out
+    return part
+
+
+def combine(medium: Medium, pa: np.ndarray, pb: np.ndarray, k: int,
+            eps: float, seed: int) -> np.ndarray:
+    """The KaFFPaE combine operator (paper §2.2), medium-generic.
+
+    ``pb`` may be *any* domain-specific clustering/partition — only ``pa``
+    must be a feasible k-partition.  Both parents' cuts are protected during
+    re-coarsening, the better valid parent seeds the coarsest level, and
+    refinement (which never worsens) assembles good parts of both.
+    """
+    pa = np.asarray(pa, dtype=np.int64)
+    pb = np.asarray(pb, dtype=np.int64)
+    if pb.max() < k and medium.objective(pb) < medium.objective(pa):
+        pa, pb = pb, pa              # seed from the better valid parent
+    levels = build_hierarchy(medium, k, seed, protect=[pa, pb])
+    coarsest = levels[-1]
+    part_c = coarsest.protect[0] if coarsest.protect is not None else pa
+    part_c = coarsest.medium.refine(part_c, k, eps, seed)
+    return uncoarsen(levels, part_c, k, eps, seed)
+
+
+# ---------------------------------------------------------------------------
+# the complete driver: cycles + time-budget restarts
+# ---------------------------------------------------------------------------
+
+def run(medium: Medium, k: int, eps: float, seed: int,
+        vcycles: Optional[int] = None, time_limit: float = 0.0,
+        input_partition: Optional[np.ndarray] = None) -> np.ndarray:
+    """The shared program driver: multilevel (or refine an input partition),
+    then iterated V-cycles, then repeated multilevel restarts under a time
+    budget (paper ``--time_limit``), keeping the best feasible result."""
+    if k <= 1:
+        return np.zeros(medium.n, dtype=np.int64)
+    t0 = time.monotonic()
+    if input_partition is not None:
+        best = np.asarray(input_partition, dtype=np.int64)
+        best = medium.refine(best, k, eps, seed)
+    else:
+        best = multilevel(medium, k, eps, seed)
+    ncyc = medium.params.vcycles if vcycles is None else vcycles
+    for cyc in range(1, ncyc):
+        best = vcycle(medium, best, k, eps, seed + 7919 * cyc)
+    trial = 1
+    while time_limit > 0 and time.monotonic() - t0 < time_limit:
+        cand = multilevel(medium, k, eps, seed + 104729 * trial)
+        if (medium.objective(cand) < medium.objective(best)
+                and medium.is_feasible(cand, k, eps)):
+            best = cand
+        trial += 1
+    return best

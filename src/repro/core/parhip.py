@@ -201,13 +201,12 @@ def parhip(g: Graph, k: int, eps: float = 0.03,
     cfg = K.PRESETS[pc["preset"]]
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), ("nodes",))
-    levels = K._build_hierarchy(g, k, cfg, seed)
-    g_c, _ = levels[-1]
-    part = K._initial_partition(g_c, k, eps, cfg, seed)
+    from repro.core import multilevel as ML
+    levels = ML.build_hierarchy(K.GraphMedium(g, cfg), k, seed)
+    part = ML.initial_partition(levels[-1], k, eps, seed)
     for li in range(len(levels) - 1, 0, -1):
-        g_fine, _ = levels[li - 1]
-        _, cl = levels[li]
-        part = C.project(part, cl)
+        g_fine = levels[li - 1].medium.g
+        part = C.project(part, levels[li].cl)
         part = parhip_refine(g_fine, part, k, eps, mesh,
                              rounds=pc["rounds"], seed=seed + li)
         if not is_feasible(g_fine, part, k, eps):

@@ -23,8 +23,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.csr import Graph, CooGraph, EllGraph, to_coo, to_ell
+from repro.core.partition import edge_cut_device, edge_cut, is_feasible
 from repro.core import lp as lp_mod
-from repro.core.partition import edge_cut_device, edge_cut
+
+
+def default_use_kernel() -> bool:
+    """Resolve ``use_kernel=None``: the Pallas affinity kernels are the
+    default k-way refinement path on TPU; off-TPU they would run in
+    interpret mode, so the COO scatter fallback/oracle is used instead."""
+    return jax.default_backend() == "tpu"
 
 
 # ---------------------------------------------------------------------------
@@ -32,11 +39,10 @@ from repro.core.partition import edge_cut_device, edge_cut
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("k", "rounds", "allow_zero_gain",
-                                             "force_balance", "localized",
-                                             "use_kernel"))
+                                             "localized", "use_kernel"))
 def _refine_scan(g: CooGraph, labels0: jax.Array, cap: jax.Array,
                  key: jax.Array, k: int, rounds: int,
-                 allow_zero_gain: bool, force_balance: bool,
+                 allow_zero_gain: bool, force_balance,
                  localized: bool, active0: Optional[jax.Array] = None,
                  ell: Optional[EllGraph] = None, use_kernel: bool = False):
     n = g.n_pad
@@ -100,13 +106,18 @@ def refine_kway(g: Graph, part: np.ndarray, k: int, eps: float = 0.03,
                 fractions: Optional[np.ndarray] = None,
                 coo: Optional[CooGraph] = None,
                 force_balance: bool = False,
-                use_kernel: bool = False) -> np.ndarray:
-    """Polish ``part``; never returns a worse feasible cut (undo-to-best)."""
+                use_kernel: Optional[bool] = None,
+                ell: Optional[EllGraph] = None) -> np.ndarray:
+    """Polish ``part``; never returns a worse feasible cut (undo-to-best).
+
+    ``use_kernel=None`` resolves to the backend default (Pallas on TPU, COO
+    scatter elsewhere); ``coo``/``ell`` accept cached per-level views.
+    """
     if k <= 1 or g.n == 0:
         return part
+    use_kernel = default_use_kernel() if use_kernel is None else use_kernel
     coo = coo if coo is not None else to_coo(g)
-    ell = None
-    if use_kernel:
+    if use_kernel and ell is None:
         ell = to_ell(g, row_tile=coo.n_pad)   # same n_pad as the COO view
     cap = jnp.asarray(_caps_for(g, k, eps, fractions), jnp.float32)
     labels0 = _pad_labels(part, coo.n_pad)
@@ -119,6 +130,55 @@ def refine_kway(g: Graph, part: np.ndarray, k: int, eps: float = 0.03,
     if edge_cut(g, out) <= edge_cut(g, part) or force_balance:
         return out
     return part
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rounds", "use_kernel"))
+def _refine_scan_batch(g: CooGraph, labels0: jax.Array, cap: jax.Array,
+                       keys: jax.Array, force: jax.Array, k: int, rounds: int,
+                       ell: Optional[EllGraph] = None,
+                       use_kernel: bool = False):
+    def one(lab0, key, f):
+        return _refine_scan(g, lab0, cap, key, k, rounds,
+                            allow_zero_gain=False, force_balance=f,
+                            localized=False, active0=None, ell=ell,
+                            use_kernel=use_kernel)
+    return jax.vmap(one)(labels0, keys, force)
+
+
+def refine_kway_batch(g: Graph, parts: list, k: int, eps: float = 0.03,
+                      rounds: int = 12, seed: int = 0,
+                      coo: Optional[CooGraph] = None,
+                      ell: Optional[EllGraph] = None,
+                      use_kernel: Optional[bool] = None) -> list:
+    """Refine several candidate partitions in one vmapped device call.
+
+    The initial-partition tournament uses this so all tries share a single
+    compile; per-candidate force-balance rides along as a traced scalar.
+    """
+    if k <= 1 or g.n == 0 or not parts:
+        return [np.asarray(p, dtype=np.int64) for p in parts]
+    use_kernel = default_use_kernel() if use_kernel is None else use_kernel
+    coo = coo if coo is not None else to_coo(g)
+    if use_kernel and ell is None:
+        ell = to_ell(g, row_tile=coo.n_pad)
+    cap = jnp.asarray(_caps_for(g, k, eps), jnp.float32)
+    labs = np.zeros((len(parts), coo.n_pad), dtype=np.int32)
+    for i, p in enumerate(parts):
+        labs[i, :g.n] = p
+    force = np.asarray([not is_feasible(g, p, k, eps) for p in parts])
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(parts))
+    outs, _ = _refine_scan_batch(coo, jnp.asarray(labs), cap, keys,
+                                 jnp.asarray(force), k, rounds,
+                                 ell=ell, use_kernel=use_kernel)
+    outs = np.asarray(outs, dtype=np.int64)[:, :g.n]
+    result = []
+    for i, p in enumerate(parts):
+        # same per-candidate paranoia as refine_kway
+        if edge_cut(g, outs[i]) <= edge_cut(g, p) or force[i]:
+            result.append(outs[i])
+        else:
+            result.append(np.asarray(p, dtype=np.int64))
+    return result
 
 
 def multi_try_refine(g: Graph, part: np.ndarray, k: int, eps: float = 0.03,

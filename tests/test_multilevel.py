@@ -1,0 +1,196 @@
+"""The shared multilevel engine (core/multilevel.py): view caching,
+V-cycle non-worsening on both media, engine parity with the pre-refactor
+drivers, hypergraph V-cycles/time budget, and the large-net star fallback."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import multilevel as ML
+from repro.core.kaffpa import GraphMedium, PRESETS, kaffpa
+from repro.core.partition import edge_cut, is_feasible
+from repro.core.hypergraph import (Hypergraph, HypergraphMedium, kahypar,
+                                   clique_expansion, coarsen_level,
+                                   connectivity)
+from repro.core.hypergraph import PRESETS as HPRESETS
+from repro.core.hypergraph import metrics as HM
+from repro.io.generators import (barabasi_albert, grid2d, planted_hypergraph)
+
+
+GRID24 = grid2d(24, 24)
+HP200 = planted_hypergraph(200, 300, blocks=4, seed=7)
+
+
+# -- device-view caching ------------------------------------------------------
+
+@pytest.mark.parametrize("make_medium", [
+    lambda: GraphMedium(GRID24, PRESETS["eco"]),
+    lambda: HypergraphMedium(HP200, HPRESETS["eco"], "km1"),
+], ids=["graph", "hypergraph"])
+def test_view_builds_are_O_levels_not_O_levels_x_rounds(make_medium):
+    """Regression: device views are constructed once per hierarchy level,
+    independent of refinement rounds / tries (pre-engine, the hypergraph
+    uncoarsening rebuilt pin-COO/ELL on every _refine_level call)."""
+    medium = make_medium()
+    levels = ML.build_hierarchy(medium, 4, seed=0)
+    before = ML.view_build_count()
+    part_c = ML.initial_partition(levels[-1], 4, 0.03, seed=0)
+    part = ML.uncoarsen(levels, part_c, 4, 0.03, seed=0)
+    built = ML.view_build_count() - before
+    assert built <= len(levels), (built, len(levels))
+    # a second full uncoarsening pass over the same hierarchy (many more
+    # refinement calls) must not construct a single additional view
+    before = ML.view_build_count()
+    part2 = ML.uncoarsen(levels, part_c, 4, 0.03, seed=1)
+    assert ML.view_build_count() == before
+    assert len(part) == medium.n and len(part2) == medium.n
+
+
+# -- V-cycle non-worsening ----------------------------------------------------
+
+def test_vcycle_non_worsening_graph():
+    medium = GraphMedium(GRID24, PRESETS["eco"])
+    part = ML.multilevel(medium, 4, 0.03, seed=2)
+    cut = edge_cut(GRID24, part)
+    for cyc in range(3):
+        part = ML.vcycle(medium, part, 4, 0.03, seed=11 + cyc)
+        c = edge_cut(GRID24, part)
+        assert c <= cut, (c, cut)
+        assert is_feasible(GRID24, part, 4, 0.03)
+        cut = c
+
+
+@pytest.mark.parametrize("objective", ["km1", "cut"])
+def test_vcycle_non_worsening_hypergraph(objective):
+    medium = HypergraphMedium(HP200, HPRESETS["eco"], objective)
+    part = ML.multilevel(medium, 4, 0.03, seed=2)
+    obj = medium.objective(part)
+    for cyc in range(3):
+        part = ML.vcycle(medium, part, 4, 0.03, seed=11 + cyc)
+        o = medium.objective(part)
+        assert o <= obj, (o, obj)
+        assert HM.is_feasible(HP200, part, 4, 0.03)
+        obj = o
+
+
+# -- hypergraph V-cycles + time budget (engine features for free) ------------
+
+def test_kahypar_vcycles_and_time_limit():
+    hg = planted_hypergraph(400, 600, blocks=4, seed=11)
+    base = kahypar(hg, 4, 0.03, "eco", seed=1)
+    more = kahypar(hg, 4, 0.03, "eco", seed=1, vcycles=3, time_limit=1.0)
+    assert HM.is_feasible(hg, more, 4, 0.03)
+    # same seed → same first cycle; V-cycles never worsen and restarts only
+    # replace the incumbent with strictly better feasible candidates
+    assert connectivity(hg, more) <= connectivity(hg, base)
+
+
+# -- engine parity with the pre-refactor drivers ------------------------------
+
+# Reference objectives measured at the PR-2 seed (pre-refactor drivers) on
+# the exact instances/seeds below; the engine must stay within tolerance.
+PRE_REFACTOR_REFS = {
+    "kaffpa_eco_grid32_k4": 92,        # edge cut
+    "kaffpa_strong_grid32_k4": 89,     # edge cut
+    "kaffpa_ecosocial_ba2k_k8": 4561,  # edge cut
+    "kahypar_eco_hp400_k4": 106,       # (λ−1)
+}
+
+
+def test_engine_parity_graph_mesh():
+    g = grid2d(32, 32)
+    p = kaffpa(g, 4, 0.03, "eco", seed=3)
+    assert is_feasible(g, p, 4, 0.03)
+    assert edge_cut(g, p) <= PRE_REFACTOR_REFS["kaffpa_eco_grid32_k4"] * 1.15
+    p = kaffpa(g, 4, 0.03, "strong", seed=3)
+    assert is_feasible(g, p, 4, 0.03)
+    assert edge_cut(g, p) <= \
+        PRE_REFACTOR_REFS["kaffpa_strong_grid32_k4"] * 1.15
+
+
+def test_engine_parity_graph_social():
+    g = barabasi_albert(2048, 4, seed=1)
+    p = kaffpa(g, 8, 0.03, "ecosocial", seed=1)
+    assert is_feasible(g, p, 8, 0.03)
+    assert edge_cut(g, p) <= \
+        PRE_REFACTOR_REFS["kaffpa_ecosocial_ba2k_k8"] * 1.15
+
+
+def test_engine_parity_hypergraph():
+    hg = planted_hypergraph(400, 600, blocks=4, seed=11)
+    p = kahypar(hg, 4, 0.03, "eco", seed=1)
+    assert HM.is_feasible(hg, p, 4, 0.03)
+    assert connectivity(hg, p) <= \
+        PRE_REFACTOR_REFS["kahypar_eco_hp400_k4"] * 1.15
+
+
+# -- medium-generic combine ---------------------------------------------------
+
+def test_combine_hypergraph_offspring_not_worse():
+    """The engine's combine works on any medium — KaHyParE for free."""
+    medium = HypergraphMedium(HP200, HPRESETS["fast"], "km1")
+    pa = ML.multilevel(medium, 4, 0.03, seed=1)
+    pb = ML.multilevel(medium, 4, 0.03, seed=2)
+    child = ML.combine(medium, pa, pb, 4, 0.03, seed=5)
+    better = min(medium.objective(pa), medium.objective(pb))
+    assert medium.objective(child) <= better
+    assert HM.is_feasible(HP200, child, 4, 0.03)
+
+
+def test_combine_accepts_arbitrary_clustering_pb():
+    """``pb`` may be any labelling (labels ≥ k): the signature split must
+    not collide, so ``pa`` stays representable and the child never loses to
+    the only valid parent."""
+    medium = GraphMedium(GRID24, PRESETS["fast"])
+    pa = ML.multilevel(medium, 4, 0.03, seed=1)
+    pb = np.arange(GRID24.n, dtype=np.int64) // 24   # 24 column clusters > k
+    child = ML.combine(medium, pa, pb, 4, 0.03, seed=3)
+    assert edge_cut(GRID24, child) <= edge_cut(GRID24, pa)
+    assert is_feasible(GRID24, child, 4, 0.03)
+
+
+def test_kahypar_rejects_bad_objective_even_for_trivial_k():
+    with pytest.raises(ValueError):
+        kahypar(HP200, 1, 0.03, "fast", objective="bogus")
+
+
+# -- batched tournament refinement -------------------------------------------
+
+def test_refine_batch_matches_feasibility_and_quality():
+    from repro.core.refine import refine_kway_batch
+    from repro.core.initial import random_partition
+    parts = [random_partition(GRID24, 4, seed=s) for s in range(3)]
+    outs = refine_kway_batch(GRID24, parts, 4, 0.03, rounds=8, seed=1)
+    assert len(outs) == 3
+    for p0, p1 in zip(parts, outs):
+        assert edge_cut(GRID24, p1) <= edge_cut(GRID24, p0)
+        assert is_feasible(GRID24, p1, 4, 0.03)
+
+
+# -- large-net star fallback --------------------------------------------------
+
+def test_large_net_star_fallback_gives_signal():
+    # a single giant net is the only structure: without the fallback the
+    # rating graph is empty and coarsening stalls at the identity
+    hg = Hypergraph.from_nets(64, [list(range(64))])
+    off = clique_expansion(hg, max_net_size=16, large_net_fallback=False)
+    assert len(off.adjncy) == 0
+    on = clique_expansion(hg, max_net_size=16)
+    assert len(on.adjncy) == 2 * 63          # star around the first pin
+    res = coarsen_level(hg, max_cluster_weight=8, seed=0, max_net_size=16)
+    assert res is not None
+    coarse, cl = res
+    assert coarse.n < hg.n
+    assert coarse.total_vwgt() == hg.total_vwgt()
+
+
+def test_planted_instance_with_giant_net_partitions_fine():
+    base = planted_hypergraph(120, 180, blocks=4, seed=9)
+    nets = [list(base.net_pins(e)) for e in range(base.m)]
+    nets.append(list(range(120)))            # one giant net spanning all
+    hg = Hypergraph.from_nets(120, nets)
+    part = kahypar(hg, 4, 0.03, "fast", seed=1, objective="km1")
+    assert HM.is_feasible(hg, part, 4, 0.03)
+    from repro.core.hypergraph.initial import random_partition
+    rnd = connectivity(hg, random_partition(hg, 4, seed=0))
+    assert connectivity(hg, part) * 2 <= rnd
