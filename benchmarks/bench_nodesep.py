@@ -1,0 +1,80 @@
+"""Node-separator benchmark → ``BENCH_nodesep.json``.
+
+Multilevel separator engine (core/nodesep) vs the post-hoc baseline
+(KaFFPa bipartition + boundary vertex cover, core/separator.py) on three
+fixed seeded instances × eps ∈ {0.05, 0.20}.  Records wall-clock and the
+achieved separator weight per cell so the quality/perf trajectory is
+tracked across PRs.  Invoked by ``python benchmarks/run.py --smoke`` (CI)
+or directly.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+EPS = (0.05, 0.20)
+SEED = 1
+PRESET = "eco"
+
+
+def _instances():
+    from repro.io.generators import (barabasi_albert, grid2d,
+                                     random_geometric)
+    return {
+        "grid32": grid2d(32, 32),
+        "ba1k": barabasi_albert(1024, 4, seed=3),
+        "geo1k": random_geometric(1024, seed=5),
+    }
+
+
+def collect() -> dict:
+    from repro.core.nodesep import (nodesep_labels, separator_invariant_ok,
+                                    separator_is_feasible, separator_weight)
+    from repro.core.separator import node_separator, verify_separator
+
+    res = {}
+    for name, g in _instances().items():
+        for eps in EPS:
+            t0 = time.perf_counter()
+            labels = nodesep_labels(g, eps, PRESET, seed=SEED)
+            ml_s = time.perf_counter() - t0
+            ml_w = separator_weight(g, labels)
+            ml_ok = bool(separator_invariant_ok(g, labels)
+                         and separator_is_feasible(g, labels, eps))
+            t0 = time.perf_counter()
+            sep, part = node_separator(g, eps, PRESET, seed=SEED)
+            ph_s = time.perf_counter() - t0
+            ph_w = int(g.vwgt[sep].sum())
+            ph_ok = bool(verify_separator(g, part, sep, 2))
+            res[f"{name}_eps{eps:g}"] = {
+                "ml_s": round(ml_s, 2), "ml_w": ml_w, "ml_ok": ml_ok,
+                "posthoc_s": round(ph_s, 2), "posthoc_w": ph_w,
+                "posthoc_ok": ph_ok,
+            }
+    return res
+
+
+def main(out_path: str = "BENCH_nodesep.json") -> dict:
+    cells = collect()
+    # only a valid (feasible + separating) result may count as a win/tie
+    wins = sum(c["ml_ok"] and c["ml_w"] < c["posthoc_w"]
+               for c in cells.values())
+    ties = sum(c["ml_ok"] and c["ml_w"] == c["posthoc_w"]
+               for c in cells.values())
+    report = {"nodesep": cells,
+              "summary": {"cells": len(cells), "ml_strictly_better": wins,
+                          "ties": ties,
+                          "ml_never_worse": wins + ties == len(cells)}}
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    for name, cell in cells.items():
+        print(f"{name}: ml w={cell['ml_w']} ({cell['ml_s']}s) vs "
+              f"posthoc w={cell['posthoc_w']} ({cell['posthoc_s']}s)",
+              flush=True)
+    print(f"summary: {report['summary']}")
+    print(f"wrote {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

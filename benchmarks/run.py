@@ -3,8 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Roofline tables (deliverable
 g) are produced by ``benchmarks/roofline.py`` from the dry-run artifacts.
 
-``python benchmarks/run.py --smoke`` runs only the end-to-end engine
-benchmark and writes ``BENCH_engine.json`` (the CI perf-trajectory record).
+``python benchmarks/run.py --smoke`` runs the end-to-end engine benchmark
+and the node-separator benchmark, writing ``BENCH_engine.json`` and
+``BENCH_nodesep.json`` (the CI perf-trajectory records).
 """
 from __future__ import annotations
 
@@ -12,8 +13,9 @@ import sys
 
 
 def smoke() -> None:
-    from benchmarks import bench_engine
+    from benchmarks import bench_engine, bench_nodesep
     bench_engine.main()
+    bench_nodesep.main()
 
 
 def main() -> None:
@@ -25,6 +27,9 @@ def main() -> None:
     print("# --- separators / edge partitioning / ordering / mapping / ILP "
           "(paper §2.6-2.10)")
     bench_tools.main()
+    print("# --- multilevel node separators vs post-hoc baseline (§2.8)")
+    from benchmarks import bench_nodesep
+    bench_nodesep.main()
     print("# --- hypergraph partitioning (kahypar vs star-expansion baseline)")
     bench_hypergraph.main()
     print("# --- kernels (DESIGN.md §6)")

@@ -79,14 +79,24 @@ def kahypar(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
 
 def node_separator(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
                    imbalance: float, suppress_output: bool = True,
-                   seed: int = 0, mode: int = ECO):
+                   seed: int = 0, mode: int = ECO, multilevel: bool = True):
     """→ (num_separator_vertices, separator ids).
 
-    nparts == 2 recommended when separator size is the objective (§5.2).
+    nparts == 2 (the recommended §5.2 setting) runs the multilevel
+    separator engine (core/nodesep) which optimizes separator weight at
+    every hierarchy level; ``multilevel=False`` selects the post-hoc
+    two-step construction (partition, then vertex-cover the boundary —
+    the seed-parity baseline).  nparts > 2 always uses the pairwise
+    post-hoc construction.
     """
     from repro.core import kaffpa as K
     from repro.core import separator as S
     g = _graph(n, vwgt, xadj, adjcwgt, adjncy)
+    if nparts == 2 and multilevel:
+        from repro.core.nodesep import multilevel_node_separator
+        sep, _ = multilevel_node_separator(g, imbalance, _MODE_NAMES[mode],
+                                           seed=seed)
+        return len(sep), sep
     part = K.kaffpa(g, nparts, imbalance, _MODE_NAMES[mode], seed=seed)
     if nparts == 2:
         sep, _ = S.node_separator(g, imbalance, _MODE_NAMES[mode], seed,

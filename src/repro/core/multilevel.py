@@ -254,12 +254,17 @@ def initial_partition(level: Level, k: int, eps: float, seed: int
     cands = medium.initial_candidates(k, eps, seed)
     refined = medium.refine_batch(cands, k, eps, seed)
     best, best_obj = None, np.inf
+    best_any, best_any_obj = None, np.inf
     for part in refined:
         obj = medium.objective(part)
+        if obj < best_any_obj:
+            best_any, best_any_obj = part, obj
         if obj < best_obj and medium.is_feasible(part, k, eps):
             best, best_obj = part, obj
-        elif best is None:
-            best = part
+    # no feasible candidate: seed from the best objective anyway — the
+    # uncoarsening refiners force balance back (tight-eps media hit this)
+    if best is None:
+        best = best_any
     return medium.polish(best, k, eps, seed)
 
 

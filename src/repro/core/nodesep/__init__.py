@@ -1,0 +1,33 @@
+"""Multilevel node-separator subsystem (DESIGN.md §8).
+
+First-class separators on the shared multilevel engine: the 3-label
+{A, B, S} `SeparatorMedium`, size-constrained separator LP/FM refinement
+(Pallas affinity kernel with k=3 on TPU, COO scatter oracle elsewhere),
+the König vertex-cover polish, and the ``node_separator`` program entry.
+The post-hoc two-step construction (core/separator.py) remains as the
+seed-parity baseline.
+"""
+from repro.core.nodesep.driver import (NodesepConfig, PRESETS,
+                                       SeparatorMedium,
+                                       multilevel_node_separator,
+                                       nodesep_labels, split_labels)
+from repro.core.nodesep.refine import (SEP, boundary_to_separator,
+                                       flow_separator_polish,
+                                       refine_separator,
+                                       refine_separator_batch,
+                                       sep_affinity_coo, sep_affinity_ell,
+                                       separator_caps,
+                                       separator_invariant_ok,
+                                       separator_is_feasible,
+                                       separator_weight,
+                                       vertex_cover_polish)
+
+__all__ = [
+    "NodesepConfig", "PRESETS", "SEP", "SeparatorMedium",
+    "boundary_to_separator", "flow_separator_polish",
+    "multilevel_node_separator", "nodesep_labels",
+    "refine_separator", "refine_separator_batch", "sep_affinity_coo",
+    "sep_affinity_ell", "separator_caps", "separator_invariant_ok",
+    "separator_is_feasible", "separator_weight", "split_labels",
+    "vertex_cover_polish",
+]

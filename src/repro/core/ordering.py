@@ -2,7 +2,11 @@
 
 ``reduced_nd``: apply data-reduction rules exhaustively, then nested
 dissection on the kernel; ``fast_reduced_nd`` uses the fast preset and fewer
-ND levels.  Reduction numbers follow §4.7:
+ND levels.  Dissection separators come from the multilevel node-separator
+engine (core/nodesep, DESIGN.md §8), which optimizes separator weight
+directly at every hierarchy level; the post-hoc two-step construction
+(core/separator.py) remains available as the seed-parity baseline.
+Reduction numbers follow §4.7:
 
   0 simplicial node reduction (neighbourhood is a clique → eliminate first)
   1 indistinguishable nodes   (same closed neighbourhood → merge)
@@ -22,7 +26,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.csr import Graph
-from repro.core.separator import node_separator
+from repro.core.nodesep import multilevel_node_separator
 
 
 def _neighbor_sets(g: Graph):
@@ -151,11 +155,14 @@ def _min_degree_order(g: Graph) -> np.ndarray:
 
 def _nested_dissection(g: Graph, ids: np.ndarray, out: list, seed: int,
                        preset: str, min_size: int = 64,
-                       depth: int = 0) -> None:
+                       depth: int = 0, eps: float = 0.2) -> None:
     if g.n <= min_size or depth > 24:
         out.extend(ids[_min_degree_order(g)].tolist())
         return
-    sep, part = node_separator(g, eps=0.2, preset=preset, seed=seed + depth)
+    # each subproblem owns a distinct seed (2s+1 / 2s+2 recursion below), so
+    # siblings never share a separator RNG stream
+    sep, part = multilevel_node_separator(g, eps=eps, preset=preset,
+                                          seed=seed)
     in_sep = np.zeros(g.n, dtype=bool)
     in_sep[sep] = True
     a_mask = (part == 0) & ~in_sep
@@ -166,23 +173,25 @@ def _nested_dissection(g: Graph, ids: np.ndarray, out: list, seed: int,
     ga, ia = g.subgraph(a_mask)
     gb, ib = g.subgraph(b_mask)
     _nested_dissection(ga, ids[ia], out, seed * 2 + 1, preset, min_size,
-                       depth + 1)
+                       depth + 1, eps)
     _nested_dissection(gb, ids[ib], out, seed * 2 + 2, preset, min_size,
-                       depth + 1)
+                       depth + 1, eps)
     out.extend(ids[np.flatnonzero(in_sep)].tolist())
 
 
 def reduced_nd(g: Graph, preset: str = "eco", seed: int = 0,
-               reduction_order=(0, 1, 2, 3, 4)) -> np.ndarray:
+               reduction_order=(0, 1, 2, 3, 4),
+               eps: float = 0.2) -> np.ndarray:
     """Returns permutation ``order`` with order[i] = i-th eliminated vertex.
 
-    (The library's `ordering` output array is the inverse permutation —
-    see interface.reduced_nd.)
+    ``eps`` is the separator imbalance threaded through the whole nested
+    dissection recursion.  (The library's `ordering` output array is the
+    inverse permutation — see interface.reduced_nd.)
     """
     kernel, old_ids, prefix, follow = apply_reductions(g, reduction_order)
     out: list = []
     if kernel.n:
-        _nested_dissection(kernel, old_ids, out, seed, preset)
+        _nested_dissection(kernel, old_ids, out, seed, preset, eps=eps)
     order = list(prefix)
     seen = set(prefix)
     for v in out:
@@ -205,9 +214,9 @@ def reduced_nd(g: Graph, preset: str = "eco", seed: int = 0,
     return np.asarray(order, dtype=np.int64)
 
 
-def fast_reduced_nd(g: Graph, seed: int = 0) -> np.ndarray:
+def fast_reduced_nd(g: Graph, seed: int = 0, eps: float = 0.2) -> np.ndarray:
     return reduced_nd(g, preset="fast", seed=seed,
-                      reduction_order=(0, 3, 4))
+                      reduction_order=(0, 3, 4), eps=eps)
 
 
 def fill_in(g: Graph, order: np.ndarray) -> int:

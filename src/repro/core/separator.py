@@ -118,9 +118,32 @@ def node_separator(g: Graph, eps: float = 0.20, preset: str = "strong",
 
 def verify_separator(g: Graph, part: np.ndarray, sep: np.ndarray,
                      k: int) -> bool:
-    """No edge may run between distinct blocks once S is removed."""
+    """No edge may run between distinct blocks once S is removed, AND
+    removing S must actually disconnect the blocks: no connected component
+    of G − S may contain vertices of two distinct blocks.  The component
+    sweep asserts the disconnection property directly; it is implied by the
+    edge check (a mixed component must contain a cross-block edge), so it
+    is belt-and-braces — a second, independent implementation of the
+    guarantee rather than a stronger one."""
+    part = np.asarray(part, dtype=np.int64)
     in_sep = np.zeros(g.n, dtype=bool)
-    in_sep[sep] = True
+    in_sep[np.asarray(sep, dtype=np.int64)] = True
     src = g.edge_sources()
     ok = in_sep[src] | in_sep[g.adjncy] | (part[src] == part[g.adjncy])
-    return bool(np.all(ok))
+    if not np.all(ok):
+        return False
+    # connected components of G - S via label propagation to the minimum id
+    comp = np.where(in_sep, -1, np.arange(g.n))
+    alive = ~in_sep[src] & ~in_sep[g.adjncy]
+    u, v = src[alive], g.adjncy[alive]
+    while True:
+        nxt = comp.copy()
+        np.minimum.at(nxt, u, comp[v])
+        if np.array_equal(nxt, comp):
+            break
+        comp = nxt
+    for c in np.unique(comp[comp >= 0]):
+        members = comp == c
+        if len(np.unique(part[members])) > 1:
+            return False
+    return True

@@ -47,6 +47,20 @@ def lp_affinity(nbr: jax.Array, wgt: jax.Array, labels: jax.Array,
     return aff[:, :k]
 
 
+def sep_affinity(nbr: jax.Array, wgt: jax.Array, vwgt: jax.Array,
+                 labels: jax.Array, use_pallas: bool = True) -> jax.Array:
+    """ELL graph + 3-labels → (n_pad, 3) neighbour *vertex-weight* histogram
+    — the separator-gain contraction (DESIGN.md §8).
+
+    Same kernel as ``lp_affinity`` with k=3 and the edge weights replaced by
+    gathered neighbour vertex weights; ``wgt > 0`` is the invariant mask (a
+    padded ELL slot may alias a real vertex when n == n_pad, so the edge
+    weight — zero exactly on padding — gates the gather, not the slot id).
+    """
+    vw_nbr = jnp.where(wgt > 0, vwgt[nbr], 0.0)
+    return lp_affinity(nbr, vw_nbr, labels, 3, use_pallas=use_pallas)
+
+
 def pin_count(pins: jax.Array, pin_mask: jax.Array, netw: jax.Array,
               labels: jax.Array, k: int, use_pallas: bool = True):
     """Net→pin ELL + labels → ((e_pad, k) pin counts, weighted scores).

@@ -91,6 +91,52 @@ def test_metis_roundtrip_property(g):
         assert np.array_equal(g.vwgt, g2.vwgt)
 
 
+@given(graphs(max_n=20), st.integers(0, 99))
+@settings(max_examples=10, deadline=None)
+def test_nodesep_refinement_invariant_every_step_every_level(g, seed):
+    """Invariant: every separator-refinement step yields labels where no A
+    vertex is adjacent to a B vertex — at each hierarchy level (the
+    two-hop pull-in mask guarantee, DESIGN.md §8)."""
+    from repro.core import multilevel as ML
+    from repro.core import nodesep as NS
+    cfg = NS.NodesepConfig(refine_rounds=4, bisect_rounds=4,
+                           initial_tries=2, stop_n_floor=4,
+                           contraction_stop_factor=2)
+    medium = NS.SeparatorMedium(g, cfg)
+    levels = ML.build_hierarchy(medium, 2, seed)
+    for level in levels:
+        gm = level.medium
+        cands = gm.initial_candidates(2, 0.2, seed)
+        for c in cands:
+            assert NS.separator_invariant_ok(gm.g, c)
+        labels = cands[0]
+        coo, ell = gm.views
+        for step in range(3):       # single-round steps expose every state
+            labels = NS.refine_separator(gm.g, labels, 0.2, rounds=1,
+                                         seed=seed + step, coo=coo, ell=ell,
+                                         use_kernel=gm.use_kernel)
+            assert NS.separator_invariant_ok(gm.g, labels)
+        labels = gm.refine(labels, 2, 0.2, seed)    # full per-level pipeline
+        assert NS.separator_invariant_ok(gm.g, labels)
+
+
+@given(graphs(max_n=20), st.integers(0, 99))
+@settings(max_examples=15, deadline=None)
+def test_separator_io_roundtrip_property(g, seed):
+    import os
+    import tempfile
+    rng = np.random.default_rng(seed)
+    part = rng.integers(0, 2, g.n)
+    sep_ids = np.flatnonzero(rng.random(g.n) < 0.3)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "sep.txt")
+        metis.write_separator(part, sep_ids, 2, p)
+        part2, sep2 = metis.read_separator(p, k=2)
+        assert np.array_equal(np.sort(sep_ids), np.sort(sep2))
+        keep = np.setdiff1d(np.arange(g.n), sep_ids)
+        assert np.array_equal(part[keep], part2[keep])
+
+
 @given(st.integers(2, 6), st.integers(0, 999))
 @settings(max_examples=20, deadline=None)
 def test_capped_accept_never_overflows(k, seed):

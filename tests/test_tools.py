@@ -50,6 +50,21 @@ def test_edge_partition_beats_naive_replication():
     assert m_ep["replication"] < m_nv["replication"]
 
 
+def test_edge_partition_vcycles_keep_infinity_edges_together():
+    """edge_partition rides multilevel.run on a GraphMedium of the SPAC
+    graph; protected re-coarsening (V-cycles) must not tear the
+    infinity-weight auxiliary cycles apart — replication stays low and
+    never worsens vs the single-cycle run."""
+    base = edge_partition(GRID, 4, 0.05, "fast", seed=1)
+    more = edge_partition(GRID, 4, 0.05, "fast", seed=1, vcycles=3)
+    m_base = edge_partition_metrics(GRID, base, 4)
+    m_more = edge_partition_metrics(GRID, more, 4)
+    assert m_more["replication"] <= m_base["replication"] + 1e-9
+    nv = edge_partition_metrics(GRID, naive_edge_partition(GRID, 4, seed=1),
+                                4)
+    assert m_more["replication"] < nv["replication"]
+
+
 def test_distance_matrix():
     dist = processor_distance_matrix([2, 2], [1, 10])
     assert dist[0, 0] == 0
