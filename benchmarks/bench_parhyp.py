@@ -1,0 +1,73 @@
+"""Distributed-vs-sequential hypergraph smoke → ``BENCH_parhyp.json``.
+
+Runs ``parhyp`` (the shard_map distributed partitioner, on a mesh over all
+local devices — one device in CI) against sequential ``kahypar`` at an
+equal quality budget (same engine preset, same instances/seeds), recording
+wall-clock and the (λ−1) objective.  Asserts the acceptance criterion:
+distributed quality within 5% of sequential on every cell.  Invoked by
+``python benchmarks/run.py --smoke`` (CI) or directly.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+QUALITY_SLACK = 1.05         # distributed ≤ 5% over sequential (smoke gate)
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def cells():
+    from repro.io.generators import planted_hypergraph, random_hypergraph
+    hp = planted_hypergraph(400, 600, blocks=4, seed=11)
+    hr = random_hypergraph(512, 768, seed=5)
+    return [
+        ("parhyp_eco_hp400_k4", hp, 4, "eco"),
+        ("parhyp_eco_hp400_k2", hp, 2, "eco"),
+        ("parhyp_fast_hr512_k4", hr, 4, "fast"),
+    ]
+
+
+def collect() -> dict:
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core.hypergraph import connectivity, kahypar
+    from repro.core.hypergraph import metrics as HM
+    from repro.core.hypergraph.dist import PARHYP_PRESETS, parhyp
+
+    mesh = Mesh(np.array(jax.devices()), ("nets",))
+    res = {}
+    for name, hg, k, pre in cells():
+        seq_preset = PARHYP_PRESETS[pre]["preset"]
+        part_s, dt_s = _timed(kahypar, hg, k, 0.03, seq_preset, 1)
+        part_d, dt_d = _timed(parhyp, hg, k, 0.03, pre, 1, mesh)
+        km1_s = connectivity(hg, part_s)
+        km1_d = connectivity(hg, part_d)
+        assert HM.is_feasible(hg, part_d, k, 0.03), name
+        assert km1_d <= QUALITY_SLACK * km1_s, (name, km1_d, km1_s)
+        res[name] = {
+            "devices": len(mesh.devices.reshape(-1)),
+            "s_dist": round(dt_d, 2), "km1_dist": km1_d,
+            "s_seq": round(dt_s, 2), "km1_seq": km1_s,
+            "ratio": round(km1_d / max(km1_s, 1), 4),
+        }
+    return res
+
+
+def main(out_path: str = "BENCH_parhyp.json") -> dict:
+    report = {"parhyp": collect(), "quality_slack": QUALITY_SLACK}
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    for name, cell in report["parhyp"].items():
+        print(f"{name}: {cell}", flush=True)
+    print(f"wrote {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

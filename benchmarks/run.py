@@ -3,9 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Roofline tables (deliverable
 g) are produced by ``benchmarks/roofline.py`` from the dry-run artifacts.
 
-``python benchmarks/run.py --smoke`` runs the end-to-end engine benchmark
-and the node-separator benchmark, writing ``BENCH_engine.json`` and
-``BENCH_nodesep.json`` (the CI perf-trajectory records).
+``python benchmarks/run.py --smoke`` runs the end-to-end engine benchmark,
+the node-separator benchmark, and the distributed-hypergraph smoke,
+writing ``BENCH_engine.json``, ``BENCH_nodesep.json`` and
+``BENCH_parhyp.json`` (the CI perf-trajectory records).
 """
 from __future__ import annotations
 
@@ -13,9 +14,10 @@ import sys
 
 
 def smoke() -> None:
-    from benchmarks import bench_engine, bench_nodesep
+    from benchmarks import bench_engine, bench_nodesep, bench_parhyp
     bench_engine.main()
     bench_nodesep.main()
+    bench_parhyp.main()
 
 
 def main() -> None:
@@ -32,6 +34,9 @@ def main() -> None:
     bench_nodesep.main()
     print("# --- hypergraph partitioning (kahypar vs star-expansion baseline)")
     bench_hypergraph.main()
+    print("# --- distributed hypergraph partitioning (parhyp vs kahypar)")
+    from benchmarks import bench_parhyp
+    bench_parhyp.main()
     print("# --- kernels (DESIGN.md §6)")
     bench_kernels.main()
     print("# --- roofline (from dry-run artifacts, if present)")

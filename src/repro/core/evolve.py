@@ -97,9 +97,13 @@ def kaffpaE(g: Graph, k: int, eps: float = 0.03, preset: str = "fast",
     if quickstart:
         # each island created a few; distribute them among all islands
         every = [ind for pop in islands for ind in pop]
+        need = population - pop0
         for isl in range(n_islands):
-            extra = rng.choice(len(every), size=population - pop0,
-                               replace=False)
+            # the pool can be smaller than the draw (e.g. n_islands=1,
+            # population=3 → pool 1, need 2): fall back to sampling with
+            # replacement — the copies diverge under combine/mutation
+            extra = rng.choice(len(every), size=need,
+                               replace=need > len(every))
             islands[isl].extend(Individual(every[e].part.copy(),
                                            every[e].fitness) for e in extra)
 

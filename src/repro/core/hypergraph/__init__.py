@@ -15,6 +15,9 @@ from repro.core.hypergraph.coarsen import (clique_expansion, contract,
 from repro.core.hypergraph.driver import (HypergraphMedium, KahyparConfig,
                                           PRESETS, kahypar,
                                           multilevel_hypergraph_partition)
+from repro.core.hypergraph.dist import (PARHYP_PRESETS, ShardedHypergraph,
+                                        parhyp, parhyp_refine,
+                                        shard_hypergraph)
 from repro.core.hypergraph.initial import greedy_growing, random_partition
 from repro.core.hypergraph.metrics import (balance, block_weights,
                                            connectivity, cut_net, evaluate,
@@ -32,4 +35,6 @@ __all__ = [
     "refine_hypergraph",
     "HypergraphMedium", "KahyparConfig", "PRESETS", "kahypar",
     "multilevel_hypergraph_partition",
+    "PARHYP_PRESETS", "ShardedHypergraph", "parhyp", "parhyp_refine",
+    "shard_hypergraph",
 ]

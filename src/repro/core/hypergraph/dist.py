@@ -1,0 +1,383 @@
+"""parhyp — distributed-memory multilevel hypergraph partitioning via
+shard_map (DESIGN.md §9), the hypergraph sibling of core/parhip.py.
+
+The MPI design of ParHIP carries over to hypergraphs with one twist: the
+unit of distribution is the *net*, not the vertex.  Nets (and all their
+pins) are block-distributed over the mesh axis ``nets`` as padded per-shard
+pin-COO rows; vertex labels stay replicated (the ghost exchange is the
+all-gather SPMD partitioning inserts).  Each refinement round:
+
+  1. every shard scatters its local pins into a per-(net, block) pin-count
+     partial and ``psum``s it into the replicated global histogram Φ(e, b);
+  2. exact (λ−1) / cut-net move gains are derived from Φ — the per-vertex
+     affinity/removal partials are again local scatters followed by a
+     ``psum`` (a net's pins all live on one shard, so its contribution to
+     any vertex gain is computed exactly once);
+  3. moves are proposed with the same noise/parity split as the sequential
+     refiner, and each shard applies capped acceptance on its *owned
+     vertex slice* against its share of the psum'd global remaining
+     capacity — so the balance constraint holds globally without a
+     sequential arbiter (the core/parhip.py recipe).
+
+With a 1-device mesh the round is bit-identical to the sequential COO
+oracle (`refine._hyper_refine_scan` with ``use_kernel=False``): same pin
+layout, same RNG stream, same scatter orders, same capped acceptance —
+the regression test pins this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+
+from repro.core.csr import _pow2_pad
+from repro.core import lp as lp_mod
+from repro.core.hypergraph.container import Hypergraph
+from repro.core.hypergraph import metrics as M
+
+_NEG = -1e30
+_NOISE = 1e-4
+_GAIN_EPS = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# host container: net-block-distributed pin COO
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardedHypergraph:
+    """Host container: nets (with all their pins) block-distributed into
+    padded per-shard pin-COO rows; net/vertex weight vectors replicated.
+
+    Padding pins are (net ``e_pad-1``, vertex ``n_pad-1``, mask 0) on a
+    zero-weight net — the `PinCoo` convention, so with one shard the layout
+    is exactly ``to_pincoo``'s (the bit-exactness anchor).
+    """
+
+    pv: np.ndarray      # (S, p_shard) int32 — pin's vertex (global id)
+    pe: np.ndarray      # (S, p_shard) int32 — pin's net (global id)
+    mask: np.ndarray    # (S, p_shard) f32   — 1 real, 0 padding
+    netw: np.ndarray    # (e_pad,) f32 — net weights, 0 padding (replicated)
+    esize: np.ndarray   # (e_pad,) f32 — pin counts, 0 padding (replicated)
+    vwgt: np.ndarray    # (n_pad,) f32 — vertex weights, 0 pad (replicated)
+    n: int
+    m: int
+    rows_v: int         # vertices owned per shard (n_pad == S * rows_v)
+
+    @property
+    def n_shards(self) -> int:
+        return self.pv.shape[0]
+
+    @property
+    def p_shard(self) -> int:
+        return self.pv.shape[1]
+
+    @property
+    def n_pad(self) -> int:
+        return len(self.vwgt)
+
+    @property
+    def e_pad(self) -> int:
+        return len(self.netw)
+
+
+def shard_hypergraph(hg: Hypergraph, n_shards: int, p_mult: int = 256,
+                     n_mult: int = 128, e_mult: int = 128
+                     ) -> ShardedHypergraph:
+    """Block-distribute nets over ``n_shards``: shard s owns the contiguous
+    net-id range [s·⌈e_pad/S⌉, (s+1)·⌈e_pad/S⌉) and all of those nets'
+    pins, laid out in global pin order."""
+    n, m, p = hg.n, hg.m, hg.pins
+    n_pad = _pow2_pad(max(n, 1), n_mult)
+    rows_v = -(-n_pad // n_shards)
+    n_pad = rows_v * n_shards
+    e_pad = _pow2_pad(m + 1, e_mult)
+    e_rows = -(-e_pad // n_shards)
+    pe_h = hg.pin_sources()
+    owner = np.minimum(pe_h // e_rows, n_shards - 1)
+    pmax = int(np.bincount(owner, minlength=n_shards).max()) if p else 1
+    p_shard = _pow2_pad(max(pmax, 1), p_mult)
+    pv = np.full((n_shards, p_shard), n_pad - 1, dtype=np.int32)
+    pe = np.full((n_shards, p_shard), e_pad - 1, dtype=np.int32)
+    mask = np.zeros((n_shards, p_shard), dtype=np.float32)
+    for s in range(n_shards):
+        ids = np.flatnonzero(owner == s)
+        pv[s, :len(ids)] = hg.eind[ids]
+        pe[s, :len(ids)] = pe_h[ids]
+        mask[s, :len(ids)] = 1.0
+    netw = np.zeros(e_pad, dtype=np.float32)
+    netw[:m] = hg.ewgt
+    esize = np.zeros(e_pad, dtype=np.float32)
+    esize[:m] = hg.net_sizes()
+    vwgt = np.zeros(n_pad, dtype=np.float32)
+    vwgt[:n] = hg.vwgt
+    return ShardedHypergraph(pv=pv, pe=pe, mask=mask, netw=netw,
+                             esize=esize, vwgt=vwgt, n=n, m=m, rows_v=rows_v)
+
+
+# ---------------------------------------------------------------------------
+# the distributed round (shard_map body)
+# ---------------------------------------------------------------------------
+
+def _dist_cnt_local(pv, pe, mask, labels, k: int, e_pad: int, axis: str):
+    """Local per-(net, block) pin-count partial, psum'd to global Φ(e, b)."""
+    pv, pe, mask = (a.reshape(-1) for a in (pv, pe, mask))
+    cnt = jnp.zeros((e_pad, k), jnp.float32).at[
+        pe, labels[pv].astype(jnp.int32)].add(mask)
+    return jax.lax.psum(cnt, axis)
+
+
+def _dist_wtot_local(pv, pe, mask, netw, vwgt, axis: str):
+    """Per-vertex total incident net weight W(v), psum'd — round-invariant,
+    so it is computed once before the refinement scan."""
+    pv, pe, mask = (a.reshape(-1) for a in (pv, pe, mask))
+    w_pin = mask * netw[pe]
+    n = vwgt.shape[0]
+    return jax.lax.psum(
+        jnp.zeros((n,), jnp.float32).at[pv].add(w_pin), axis)
+
+
+def _dist_round_local(pv, pe, mask, netw, esize, vwgt, wtot, labels, sizes,
+                      cap, key, parity, force, rows_v: int, k: int,
+                      n_shards: int, axis: str, objective: str):
+    """One distributed LP round, run per shard under shard_map.
+
+    ``labels`` is the full replicated vector; pin arrays arrive as (1, ·)
+    local blocks.  Returns (new labels for the owned vertex slice, the
+    pre-move objective) — gain math mirrors refine._hyper_refine_scan
+    exactly so the 1-shard round is bit-identical to the sequential oracle.
+    """
+    pv, pe, mask = (a.reshape(-1) for a in (pv, pe, mask))
+    n = labels.shape[0]
+    e_pad = netw.shape[0]
+    p_loc = pv.shape[0]
+    w_pin = mask * netw[pe]
+    cnt = jax.lax.psum(
+        jnp.zeros((e_pad, k), jnp.float32).at[
+            pe, labels[pv].astype(jnp.int32)].add(mask), axis)
+    obj_fn = M.km1_device if objective == "km1" else M.cut_net_device
+    obj = obj_fn(cnt, netw)
+    # exact move gains from the replicated histogram (per-vertex partials
+    # from local pins, psum'd — each net contributes on exactly one shard)
+    cnt_e = cnt[pe]                                       # (p_loc, k)
+    cnt_own = cnt_e[jnp.arange(p_loc), labels[pv].astype(jnp.int32)]
+    if objective == "km1":
+        pres = (cnt_e > 0).astype(jnp.float32)
+        aff = jax.lax.psum(jnp.zeros((n, k), jnp.float32).at[pv].add(
+            w_pin[:, None] * pres), axis)
+        rem = jax.lax.psum(jnp.zeros((n,), jnp.float32).at[pv].add(
+            w_pin * (cnt_own == 1)), axis)
+        gain = rem[:, None] - wtot[:, None] + aff
+    else:
+        makes = (cnt_e == (esize[pe] - 1.0)[:, None])
+        joins = jax.lax.psum(jnp.zeros((n, k), jnp.float32).at[pv].add(
+            w_pin[:, None] * makes.astype(jnp.float32)), axis)
+        breaks = jax.lax.psum(jnp.zeros((n,), jnp.float32).at[pv].add(
+            w_pin * (cnt_own == esize[pe])), axis)
+        gain = joins - breaks[:, None]
+    gain = gain + jax.random.uniform(key, (n, k), jnp.float32, 0.0, _NOISE)
+    gain = gain.at[jnp.arange(n), labels].set(_NEG)
+    room = sizes[None, :] + vwgt[:, None] <= cap[None, :]
+    gain = jnp.where(room, gain, _NEG)
+    best_gain = jnp.max(gain, axis=1)
+    best_tgt = jnp.argmax(gain, axis=1).astype(labels.dtype)
+    want = best_gain > _GAIN_EPS
+    over = sizes[labels] > cap[labels]
+    want = want | (jnp.asarray(force)
+                   & over & (best_gain > _NEG / 2) & (vwgt > 0))
+    node_par = (jnp.arange(n) + parity) % 2 == 0
+    want = want & node_par
+    proposal = jnp.where(want, best_tgt, labels)
+    pri = jnp.where(want, best_gain, _NEG)
+    # Per-shard capped acceptance on the owned vertex slice against the
+    # psum'd global size constraint.  The split of the remaining room is
+    # contention-aware: per block, if the global proposed inflow (demand,
+    # computable locally from the replicated proposals) fits the room,
+    # every shard may accept (total <= demand <= room); otherwise only a
+    # rotating owner shard gets the room (total <= room).  Either way the
+    # global constraint holds without a sequential arbiter, and an even
+    # room/S split — which rounds to zero headroom for unit-weight moves at
+    # tight eps — is avoided.  With one shard the owner is always shard 0,
+    # so the round stays bit-identical to the sequential oracle.
+    me = jax.lax.axis_index(axis)
+    vw_mov = jnp.where(proposal != labels, vwgt, 0.0)
+    demand = jnp.zeros((k,), jnp.float32).at[proposal].add(vw_mov)
+    uncontended = demand <= cap - sizes
+    owner_b = (jnp.arange(k) + parity) % n_shards == me
+    cap_local = jnp.where(uncontended | owner_b, cap, sizes)
+    off = me * rows_v
+    lab_own = jax.lax.dynamic_slice(labels, (off,), (rows_v,))
+    prop_own = jax.lax.dynamic_slice(proposal, (off,), (rows_v,))
+    vw_own = jax.lax.dynamic_slice(vwgt, (off,), (rows_v,))
+    pri_own = jax.lax.dynamic_slice(pri, (off,), (rows_v,))
+    new_own = lp_mod.capped_accept(lab_own, prop_own, vw_own, sizes,
+                                   cap_local, pri_own)
+    return new_own, obj
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rows_v", "k", "rounds", "n_shards",
+                                    "axis", "objective", "mesh"))
+def _parhyp_refine_jit(mesh: Mesh, pv, pe, mask, netw, esize, vwgt,
+                       labels0, cap, key, force, rows_v: int, k: int,
+                       rounds: int, n_shards: int, axis: str,
+                       objective: str):
+    spec_p = P(axis, None)
+    spec_r = P()
+    e_pad = netw.shape[0]
+    round_fn = shard_map(
+        functools.partial(_dist_round_local, rows_v=rows_v, k=k,
+                          n_shards=n_shards, axis=axis, objective=objective),
+        mesh=mesh,
+        in_specs=(spec_p, spec_p, spec_p, spec_r, spec_r, spec_r, spec_r,
+                  spec_r, spec_r, spec_r, spec_r, spec_r, spec_r),
+        out_specs=(P(axis), P()),
+        check_vma=False,
+    )
+    cnt_fn = shard_map(
+        functools.partial(_dist_cnt_local, k=k, e_pad=e_pad, axis=axis),
+        mesh=mesh,
+        in_specs=(spec_p, spec_p, spec_p, spec_r),
+        out_specs=P(),
+        check_vma=False,
+    )
+    wtot_fn = shard_map(
+        functools.partial(_dist_wtot_local, axis=axis),
+        mesh=mesh,
+        in_specs=(spec_p, spec_p, spec_p, spec_r, spec_r),
+        out_specs=P(),
+        check_vma=False,
+    )
+    obj_fn = M.km1_device if objective == "km1" else M.cut_net_device
+    wtot = wtot_fn(pv, pe, mask, netw, vwgt)
+
+    def body(carry, key_r):
+        labels, sizes, best_obj, best_labels, parity = carry
+        new_labels, obj = round_fn(pv, pe, mask, netw, esize, vwgt, wtot,
+                                   labels, sizes, cap, key_r, parity, force)
+        # undo-to-best: track the best feasible pre-move state
+        feas = jnp.max(sizes - cap) <= 1e-6
+        better = feas & (obj < best_obj)
+        best_obj = jnp.where(better, obj, best_obj)
+        best_labels = jnp.where(better, labels, best_labels)
+        new_sizes = jnp.zeros((k,), jnp.float32).at[new_labels].add(vwgt)
+        return (new_labels, new_sizes, best_obj, best_labels,
+                parity + 1), obj
+
+    sizes0 = jnp.zeros((k,), jnp.float32).at[labels0].add(vwgt)
+    keys = jax.random.split(key, rounds)
+    carry0 = (labels0, sizes0, jnp.inf, labels0, jnp.int32(0))
+    (labels, sizes, best_obj, best_labels, _), _ = jax.lax.scan(
+        body, carry0, keys)
+    # evaluate the final state too
+    obj = obj_fn(cnt_fn(pv, pe, mask, labels), netw)
+    feas = jnp.max(sizes - cap) <= 1e-6
+    better = feas & (obj < best_obj)
+    best_obj = jnp.where(better, obj, best_obj)
+    best_labels = jnp.where(better, labels, best_labels)
+    have = jnp.isfinite(best_obj)
+    return jnp.where(have, best_labels, labels), best_obj
+
+
+def parhyp_refine(hg: Hypergraph, part: np.ndarray, k: int,
+                  eps: float = 0.03, mesh: Optional[Mesh] = None,
+                  rounds: int = 12, seed: int = 0, objective: str = "km1",
+                  force_balance: bool = False, axis: str = "nets",
+                  sh: Optional[ShardedHypergraph] = None) -> np.ndarray:
+    """Distributed k-way LP refinement of a hypergraph partition.
+
+    Never returns a worse feasible objective than the input (the caller's
+    better-of-in/out guard, as in refine_hypergraph); ``sh`` accepts a
+    cached `ShardedHypergraph`.
+    """
+    if k <= 1 or hg.n == 0:
+        return np.asarray(part, dtype=np.int64)
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()), (axis,))
+    n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                            if a == axis]))
+    sh = sh if sh is not None else shard_hypergraph(hg, n_shards)
+    from repro.core.hypergraph.refine import _caps_for
+    cap = jnp.asarray(_caps_for(hg, k, eps), jnp.float32)
+    labels0 = np.zeros(sh.n_pad, dtype=np.int32)
+    labels0[:hg.n] = part
+    out, _ = _parhyp_refine_jit(mesh, jnp.asarray(sh.pv), jnp.asarray(sh.pe),
+                                jnp.asarray(sh.mask), jnp.asarray(sh.netw),
+                                jnp.asarray(sh.esize), jnp.asarray(sh.vwgt),
+                                jnp.asarray(labels0), cap,
+                                jax.random.PRNGKey(seed),
+                                jnp.asarray(force_balance), sh.rows_v, k,
+                                rounds, n_shards, axis, objective)
+    out = np.asarray(out, dtype=np.int64)[:hg.n]
+    score = M.connectivity if objective == "km1" else M.cut_net
+    if score(hg, out) <= score(hg, part) or force_balance:
+        return out
+    return np.asarray(part, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# the parhyp program: host-orchestrated multilevel on the shared engine
+# ---------------------------------------------------------------------------
+
+PARHYP_PRESETS = {
+    "ultrafast": dict(preset="fast", rounds=4),
+    "fast":      dict(preset="fast", rounds=8),
+    "eco":       dict(preset="eco", rounds=12),
+}
+
+
+def parhyp(hg: Hypergraph, k: int, eps: float = 0.03,
+           preconfiguration: str = "fast", seed: int = 0,
+           mesh: Optional[Mesh] = None, objective: str = "km1"
+           ) -> np.ndarray:
+    """The ``parhyp`` program: distributed multilevel hypergraph
+    partitioning (DESIGN.md §9).
+
+    Host-orchestrated multilevel on the shared engine (hierarchy +
+    initial-partition tournament from `HypergraphMedium`), with the
+    distributed LP round as the refinement engine at every level and the
+    sequential force-balance refiner as the feasibility repair fallback —
+    including level 0 of single-level hierarchies (small inputs).
+    """
+    if objective not in ("km1", "cut"):
+        raise ValueError(f"unknown objective {objective!r}")
+    if k <= 1:
+        return np.zeros(hg.n, dtype=np.int64)
+    from repro.core import multilevel as ML
+    from repro.core.hypergraph.coarsen import project
+    from repro.core.hypergraph.driver import PRESETS, HypergraphMedium
+    from repro.core.hypergraph.refine import refine_hypergraph
+    pc = PARHYP_PRESETS[preconfiguration]
+    cfg = PRESETS[pc["preset"]]
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()), ("nets",))
+    levels = ML.build_hierarchy(HypergraphMedium(hg, cfg, objective), k,
+                                seed)
+    part = ML.initial_partition(levels[-1], k, eps, seed)
+
+    def refine_level(hg_fine: Hypergraph, part: np.ndarray,
+                     li: int) -> np.ndarray:
+        part = parhyp_refine(hg_fine, part, k, eps, mesh,
+                             rounds=pc["rounds"], seed=seed + li,
+                             objective=objective)
+        if not M.is_feasible(hg_fine, part, k, eps):
+            part = refine_hypergraph(hg_fine, part, k, eps, rounds=6,
+                                     seed=seed + li, objective=objective,
+                                     force_balance=True)
+        return part
+
+    for li in range(len(levels) - 1, 0, -1):
+        part = project(part, levels[li].cl)
+        part = refine_level(levels[li - 1].medium.hg, part, li)
+    if len(levels) == 1:
+        # single-level hierarchy: the loop above is empty — still refine
+        # and repair at level 0 (the parhip bug this PR fixes)
+        part = refine_level(hg, part, 0)
+    return part

@@ -77,6 +77,30 @@ def kahypar(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
     return score(hg, part), part
 
 
+def parhyp(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
+           imbalance: float, suppress_output: bool = True, seed: int = 0,
+           preconfiguration: str = "fast", objective: str = "km1",
+           mesh=None):
+    """Distributed hypergraph partitioner call (the shard_map ``parhyp``
+    program, DESIGN.md §9) → (objval, part).
+
+    Same array convention as the ``kahypar`` entry; ``preconfiguration``
+    ∈ {"ultrafast", "fast", "eco"} selects the engine preset and the
+    distributed-LP round count, ``mesh`` an optional jax Mesh with a
+    ``nets`` axis (defaults to all local devices).
+    """
+    from repro.core import hypergraph as H
+    hg = H.Hypergraph.from_arrays(
+        n, np.asarray(eptr), np.asarray(eind),
+        None if ewgt is None else np.asarray(ewgt),
+        None if vwgt is None else np.asarray(vwgt))
+    part = H.parhyp(hg, nparts, imbalance,
+                    preconfiguration=preconfiguration, seed=seed,
+                    mesh=mesh, objective=objective)
+    score = H.connectivity if objective == "km1" else H.cut_net
+    return score(hg, part), part
+
+
 def node_separator(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
                    imbalance: float, suppress_output: bool = True,
                    seed: int = 0, mode: int = ECO, multilevel: bool = True):

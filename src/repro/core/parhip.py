@@ -204,13 +204,22 @@ def parhip(g: Graph, k: int, eps: float = 0.03,
     from repro.core import multilevel as ML
     levels = ML.build_hierarchy(K.GraphMedium(g, cfg), k, seed)
     part = ML.initial_partition(levels[-1], k, eps, seed)
-    for li in range(len(levels) - 1, 0, -1):
-        g_fine = levels[li - 1].medium.g
-        part = C.project(part, levels[li].cl)
+
+    def refine_level(g_fine: Graph, part: np.ndarray, li: int) -> np.ndarray:
         part = parhip_refine(g_fine, part, k, eps, mesh,
                              rounds=pc["rounds"], seed=seed + li)
         if not is_feasible(g_fine, part, k, eps):
             from repro.core import refine as R
             part = R.refine_kway(g_fine, part, k, eps, rounds=6,
                                  seed=seed + li, force_balance=True)
+        return part
+
+    for li in range(len(levels) - 1, 0, -1):
+        part = C.project(part, levels[li].cl)
+        part = refine_level(levels[li - 1].medium.g, part, li)
+    if len(levels) == 1:
+        # single-level hierarchy (n <= stop_n): the loop above is empty —
+        # still run the distributed refiner and the feasibility repair at
+        # level 0 instead of returning the raw initial partition
+        part = refine_level(g, part, 0)
     return part

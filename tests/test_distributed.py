@@ -25,6 +25,21 @@ def test_parhip_single_device():
     assert ev["feasible"]
 
 
+def test_parhip_single_level_refines(monkeypatch):
+    """Regression: with a single-level hierarchy (n <= stop_n) parhip used
+    to skip refinement and repair entirely, returning the raw initial
+    partition — level 0 must always be refined."""
+    import repro.core.parhip as PH
+    calls = []
+    orig = PH.parhip_refine
+    monkeypatch.setattr(PH, "parhip_refine",
+                        lambda *a, **kw: calls.append(1) or orig(*a, **kw))
+    small = grid2d(6, 6)                   # 36 nodes < the stop_n floor
+    part = PH.parhip(small, 4, 0.03, "ultrafastmesh", seed=3)
+    assert calls, "level-0 refinement must run on single-level hierarchies"
+    assert is_feasible(small, part, 4, 0.03)
+
+
 def test_shard_graph_partitions_edges():
     sg = shard_graph(GRID, 4)
     assert sg.n_shards == 4
@@ -64,6 +79,15 @@ def test_combine_preserves_both_parents_representability():
     assert edge_cut(GRID, child) <= min(edge_cut(GRID, pa),
                                         edge_cut(GRID, pb))
     assert is_feasible(GRID, child, 4, 0.03)
+
+
+def test_kaffpaE_quickstart_tiny_population():
+    """Regression: quickstart used to crash with `Cannot take a larger
+    sample than population` whenever population - pop0 > n_islands * pop0
+    (here: pool of 1, draw of 2)."""
+    part = kaffpaE(GRID, 4, 0.03, "fast", n_islands=1, population=3,
+                   time_limit=0, seed=5, quickstart=True)
+    assert is_feasible(GRID, part, 4, 0.03)
 
 
 def test_kaffpaE_improves_over_single_run():

@@ -1,0 +1,154 @@
+"""parhyp — the distributed (shard_map) hypergraph partitioner: sharding
+invariants, 1-device bit-exactness vs the sequential COO oracle,
+never-worse refinement, end-to-end quality, the C-API-style interface
+entry, and the multi-device subprocess run."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+from jax.sharding import Mesh
+
+from repro.core.hypergraph import (connectivity, cut_net, evaluate,
+                                   is_feasible, refine_hypergraph)
+from repro.core.hypergraph.container import to_pincoo
+from repro.core.hypergraph.dist import (parhyp, parhyp_refine,
+                                        shard_hypergraph)
+from repro.core.hypergraph.initial import random_partition
+from repro.io.generators import planted_hypergraph, random_hypergraph
+
+HG = planted_hypergraph(300, 450, blocks=4, seed=7)
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _mesh1() -> Mesh:
+    return Mesh(np.array(jax.devices()[:1]), ("nets",))
+
+
+# -- sharded container -------------------------------------------------------
+
+def test_shard_hypergraph_conserves_pins_and_weights():
+    sh = shard_hypergraph(HG, 4)
+    assert sh.n_shards == 4
+    assert sh.n_pad == sh.n_shards * sh.rows_v
+    assert float(sh.mask.sum()) == HG.pins
+    assert float(sh.vwgt.sum()) == HG.total_vwgt()
+    assert float(sh.netw.sum()) == HG.total_ewgt()
+    # every real (net, vertex) pin appears exactly once across all shards
+    real = sh.mask.reshape(-1) > 0
+    got = np.stack([sh.pe.reshape(-1)[real], sh.pv.reshape(-1)[real]], 1)
+    want = np.stack([HG.pin_sources(), HG.eind], 1)
+    assert np.array_equal(got[np.lexsort(got.T)], want[np.lexsort(want.T)])
+    # nets are block-distributed: each net's pins live on a single shard
+    owner = np.repeat(np.arange(4), sh.p_shard)[real]
+    per_net = {}
+    for e, s in zip(sh.pe.reshape(-1)[real], owner):
+        per_net.setdefault(int(e), set()).add(int(s))
+    assert all(len(s) == 1 for s in per_net.values())
+
+
+def test_one_shard_layout_matches_pincoo():
+    """The S=1 shard is exactly the sequential pin-COO view — the layout
+    half of the bit-exactness guarantee."""
+    sh = shard_hypergraph(HG, 1)
+    hc = to_pincoo(HG)
+    np.testing.assert_array_equal(sh.pv[0], np.asarray(hc.pv))
+    np.testing.assert_array_equal(sh.pe[0], np.asarray(hc.pe))
+    np.testing.assert_array_equal(sh.mask[0], np.asarray(hc.mask))
+    np.testing.assert_array_equal(sh.netw, np.asarray(hc.netw))
+    np.testing.assert_array_equal(sh.esize, np.asarray(hc.esize))
+    np.testing.assert_array_equal(sh.vwgt, np.asarray(hc.vwgt))
+
+
+# -- distributed refinement --------------------------------------------------
+
+@pytest.mark.parametrize("objective", ["km1", "cut"])
+def test_refine_bit_exact_vs_sequential_oracle(objective):
+    """A fixed 1-device mesh must reproduce the sequential COO refiner
+    bit-for-bit (same RNG stream, same scatter orders, same acceptance)."""
+    part0 = random_partition(HG, 4, seed=1)
+    a = refine_hypergraph(HG, part0, 4, rounds=6, seed=3,
+                          objective=objective, use_kernel=False)
+    b = parhyp_refine(HG, part0, 4, mesh=_mesh1(), rounds=6, seed=3,
+                      objective=objective)
+    assert np.array_equal(a, b)
+
+
+def test_refine_never_worse_and_improves_random():
+    part0 = random_partition(HG, 4, seed=2)
+    out = parhyp_refine(HG, part0, 4, mesh=_mesh1(), rounds=8, seed=1)
+    assert connectivity(HG, out) < connectivity(HG, part0)
+    assert is_feasible(HG, out, 4, 0.03)
+
+
+# -- the parhyp program ------------------------------------------------------
+
+def test_parhyp_end_to_end_quality():
+    part = parhyp(HG, 4, 0.03, "fast", seed=1, mesh=_mesh1())
+    ev = evaluate(HG, part, 4)
+    assert ev["feasible"], ev
+    rnd = connectivity(HG, random_partition(HG, 4, seed=0))
+    assert ev["km1"] * 2 <= rnd, (ev, rnd)
+
+
+def test_parhyp_cut_objective():
+    part = parhyp(HG, 4, 0.03, "ultrafast", seed=2, mesh=_mesh1(),
+                  objective="cut")
+    assert is_feasible(HG, part, 4, 0.03)
+    rnd = cut_net(HG, random_partition(HG, 4, seed=0))
+    assert cut_net(HG, part) < rnd
+
+
+def test_parhyp_single_level_refines(monkeypatch):
+    """Single-level hierarchies (n <= stop_n) must still run the
+    distributed refiner + repair at level 0 — the parhip-bug guarantee
+    parhyp carries from day one."""
+    import repro.core.hypergraph.dist as D
+    calls = []
+    orig = D.parhyp_refine
+    monkeypatch.setattr(D, "parhyp_refine",
+                        lambda *a, **kw: calls.append(1) or orig(*a, **kw))
+    hg = random_hypergraph(40, 60, seed=3)
+    part = D.parhyp(hg, 2, 0.03, "ultrafast", seed=1, mesh=_mesh1())
+    assert calls, "level-0 refinement must run on single-level hierarchies"
+    assert is_feasible(hg, part, 2, 0.03)
+
+
+def test_interface_parhyp():
+    from repro.core import interface
+    objval, part = interface.parhyp(
+        HG.n, HG.m, None, None, HG.eptr, HG.eind, 4, 0.03, seed=1,
+        preconfiguration="ultrafast", mesh=_mesh1())
+    assert objval == connectivity(HG, part)
+    assert is_feasible(HG, part, 4, 0.03)
+
+
+@pytest.mark.slow
+def test_parhyp_multidevice_subprocess():
+    """4 fake host devices: the genuinely sharded path must stay feasible
+    and no worse than 5% over the sequential partitioner."""
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.io.generators import planted_hypergraph
+        from repro.core.hypergraph import connectivity, is_feasible, kahypar
+        from repro.core.hypergraph.dist import parhyp
+        assert len(jax.devices()) == 4
+        mesh = Mesh(np.array(jax.devices()), ("nets",))
+        hg = planted_hypergraph(300, 450, blocks=4, seed=7)
+        part = parhyp(hg, 4, 0.03, "fast", seed=1, mesh=mesh)
+        assert is_feasible(hg, part, 4, 0.03)
+        km1_d = connectivity(hg, part)
+        km1_s = connectivity(hg, kahypar(hg, 4, 0.03, "fast", seed=1))
+        assert km1_d <= 1.05 * km1_s, (km1_d, km1_s)
+        print("MULTIDEV_OK", km1_d, km1_s)
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "MULTIDEV_OK" in r.stdout, r.stdout + r.stderr
