@@ -1,0 +1,97 @@
+"""Memetic-vs-single-run smoke → ``BENCH_memetic.json``.
+
+Runs the memetic partitioners through their C-API interface entries
+(``interface.kahyparE`` for both objectives, ``interface.kaffpaE``)
+against a single run of the corresponding partitioner at the same preset
+and seed.  The memetic side runs a *deterministic* generation budget
+(``GENERATIONS``) rather than a wall clock, so the gate cannot flake
+with runner speed; both sides' wall times are recorded to show the
+budgets are comparable.  Island 0's first member rides exactly the
+single run's seed (``multilevel.population`` applies the preset's full
+V-cycle schedule) and the island driver never replaces with a worse
+individual, so the memetic result is structurally never worse; the gate
+additionally requires at least one strict improvement per kahyparE
+objective (the acceptance criterion).  Invoked by ``python
+benchmarks/run.py --smoke`` (CI) or directly.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+GENERATIONS = 3              # deterministic memetic budget per smoke cell
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def collect() -> dict:
+    import numpy as np                                   # noqa: F401
+    from repro.core import interface
+    from repro.core.hypergraph import connectivity, cut_net
+    from repro.core.hypergraph import metrics as HM
+    from repro.core.partition import edge_cut, is_feasible
+    from repro.io.generators import (grid2d, planted_hypergraph,
+                                     random_hypergraph)
+
+    res = {}
+    hp = planted_hypergraph(200, 300, blocks=4, seed=11)
+    hr = random_hypergraph(256, 384, seed=5)
+    for name, hg, k, objective in [
+        ("kahyparE_km1_hp200_k4", hp, 4, "km1"),
+        ("kahyparE_km1_hr256_k2", hr, 2, "km1"),
+        ("kahyparE_cut_hp200_k4", hp, 4, "cut"),
+        ("kahyparE_cut_hr256_k2", hr, 2, "cut"),
+    ]:
+        score = connectivity if objective == "km1" else cut_net
+        (obj_s, part_s), dt_s = _timed(
+            interface.kahypar, hg.n, hg.m, None, None, hg.eptr, hg.eind, k,
+            0.03, seed=1, mode=interface.FAST, objective=objective)
+        (obj_e, part_e), dt_e = _timed(
+            interface.kahyparE, hg.n, hg.m, None, None, hg.eptr, hg.eind, k,
+            0.03, generations=GENERATIONS, seed=1, mode=interface.FAST,
+            objective=objective, n_islands=2, population=2)
+        assert obj_e == score(hg, part_e), name
+        assert HM.is_feasible(hg, part_e, k, 0.03), name
+        assert obj_e <= obj_s, (name, obj_e, obj_s)
+        res[name] = {"objective": objective, "s_mem": round(dt_e, 2),
+                     "obj_mem": obj_e, "s_single": round(dt_s, 2),
+                     "obj_single": obj_s,
+                     "ratio": round(obj_e / max(obj_s, 1), 4)}
+    for objective in ("km1", "cut"):
+        wins = [n for n, c in res.items()
+                if c["objective"] == objective and c["obj_mem"] < c["obj_single"]]
+        assert wins, f"no strict kahyparE improvement for {objective}"
+
+    g = grid2d(20, 20)
+    (cut_s, part_s), dt_s = _timed(
+        interface.kaffpa, g.n, None, g.xadj, None, g.adjncy, 4, 0.03,
+        seed=1, mode=interface.FAST)
+    (cut_e, part_e), dt_e = _timed(
+        interface.kaffpaE, g.n, None, g.xadj, None, g.adjncy, 4, 0.03,
+        generations=GENERATIONS, seed=1, mode=interface.FAST, n_islands=2,
+        population=2)
+    assert is_feasible(g, part_e, 4, 0.03)
+    assert cut_e <= cut_s, (cut_e, cut_s)
+    res["kaffpaE_grid20_k4"] = {"objective": "cut", "s_mem": round(dt_e, 2),
+                                "obj_mem": cut_e, "s_single": round(dt_s, 2),
+                                "obj_single": cut_s,
+                                "ratio": round(cut_e / max(cut_s, 1), 4)}
+    return res
+
+
+def main(out_path: str = "BENCH_memetic.json") -> dict:
+    report = {"memetic": collect(), "generations": GENERATIONS}
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    for name, cell in report["memetic"].items():
+        print(f"{name}: {cell}", flush=True)
+    print(f"wrote {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -4,9 +4,10 @@ Prints ``name,us_per_call,derived`` CSV rows.  Roofline tables (deliverable
 g) are produced by ``benchmarks/roofline.py`` from the dry-run artifacts.
 
 ``python benchmarks/run.py --smoke`` runs the end-to-end engine benchmark,
-the node-separator benchmark, and the distributed-hypergraph smoke,
-writing ``BENCH_engine.json``, ``BENCH_nodesep.json`` and
-``BENCH_parhyp.json`` (the CI perf-trajectory records).
+the node-separator benchmark, the distributed-hypergraph smoke and the
+memetic smoke, writing ``BENCH_engine.json``, ``BENCH_nodesep.json``,
+``BENCH_parhyp.json`` and ``BENCH_memetic.json`` (the CI perf-trajectory
+records).
 """
 from __future__ import annotations
 
@@ -14,10 +15,12 @@ import sys
 
 
 def smoke() -> None:
-    from benchmarks import bench_engine, bench_nodesep, bench_parhyp
+    from benchmarks import (bench_engine, bench_memetic, bench_nodesep,
+                            bench_parhyp)
     bench_engine.main()
     bench_nodesep.main()
     bench_parhyp.main()
+    bench_memetic.main()
 
 
 def main() -> None:
@@ -37,6 +40,9 @@ def main() -> None:
     print("# --- distributed hypergraph partitioning (parhyp vs kahypar)")
     from benchmarks import bench_parhyp
     bench_parhyp.main()
+    print("# --- memetic engine (kahyparE/kaffpaE vs single runs)")
+    from benchmarks import bench_memetic
+    bench_memetic.main()
     print("# --- kernels (DESIGN.md §6)")
     bench_kernels.main()
     print("# --- roofline (from dry-run artifacts, if present)")

@@ -11,31 +11,27 @@ engine implements this medium-generically (core/multilevel.py): clusters are
 split by the parents' block signatures before contraction, which
 *guarantees* the invariant (DESIGN.md §2/§7).
 
-The MPI rumor-spreading exchange is modelled by the island topology: after
-every generation each island pushes its best individual to a uniformly
-random other island (exactly the randomized rumor-spreading step; with
-shard_map islands this becomes a collective_permute — see parhip.py for the
-collective formulation of the distributed phases).
+Since PR 5 the island loop itself lives in the medium-generic memetic
+engine (core/memetic, DESIGN.md §10) — ``kaffpaE`` is the `GraphMedium`
+front: the MPI rumor-spreading exchange is the seeded migration ring
+(collective_permute when the islands are laid out as shards on a device
+mesh, a bit-identical host roll otherwise), and the KaBaPE variant rides
+the same driver with the negative-cycle child polish and the balanced
+replacement rule.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Callable, Optional
 
 import numpy as np
 
 from repro.core.csr import Graph
 from repro.core import kaffpa as K
+from repro.core import memetic as MEM
 from repro.core import multilevel as ML
-from repro.core.partition import edge_cut, is_feasible, comm_volume
+from repro.core.memetic import Individual, IslandState  # noqa: F401 (compat)
+from repro.core.partition import comm_volume, edge_cut
 from repro.core.kabape import kabape_refine
-
-
-@dataclasses.dataclass
-class Individual:
-    part: np.ndarray
-    fitness: float
 
 
 def _fitness(g: Graph, part: np.ndarray, k: int,
@@ -71,81 +67,38 @@ def kaffpaE(g: Graph, k: int, eps: float = 0.03, preset: str = "fast",
             enable_kabape: bool = False,
             kabaE_internal_bal: float = 0.01,
             quickstart: bool = False,
-            on_generation: Optional[Callable] = None) -> np.ndarray:
-    """The ``kaffpaE`` program (paper §4.2).
+            on_generation: Optional[Callable] = None,
+            mesh=None, migrate: bool = True,
+            generations: Optional[int] = None) -> np.ndarray:
+    """The ``kaffpaE`` program (paper §4.2), on the memetic engine.
 
     time_limit == 0 → only the initial population is created (paper
-    semantics).  With ``enable_kabape`` offspring get the KaBaPE
-    negative-cycle polish at the strict balance constraint.
+    semantics); ``generations`` selects a deterministic generation count
+    instead of the wall-clock budget.  With ``enable_kabape`` offspring get
+    the KaBaPE negative-cycle polish at the strict balance constraint and
+    replacement evicts infeasible members first.  ``mesh`` lays the islands
+    out as shards for collective_permute migration.
     """
+    MEM.validate_memetic_params(n_islands, population, time_limit,
+                                generations)
     cfg = K.PRESETS[preset]
-    rng = np.random.default_rng(seed)
-    t0 = time.monotonic()
-    fit = lambda p: _fitness(g, p, k, optimize_comm_volume)  # noqa: E731
+    if k <= 1:
+        return np.zeros(g.n, dtype=np.int64)
     # one medium for the whole evolution: level-0 device views are built
     # once and shared across every multilevel restart / combine / V-cycle
     medium = K.GraphMedium(g, cfg)
-
-    islands: list[list[Individual]] = []
-    pop0 = max(1, population // 2) if quickstart else population
-    for isl in range(n_islands):
-        pop = []
-        for j in range(pop0):
-            p = ML.multilevel(medium, k, eps, seed + 1009 * isl + 31 * j)
-            pop.append(Individual(p, fit(p)))
-        islands.append(pop)
-    if quickstart:
-        # each island created a few; distribute them among all islands
-        every = [ind for pop in islands for ind in pop]
-        need = population - pop0
-        for isl in range(n_islands):
-            # the pool can be smaller than the draw (e.g. n_islands=1,
-            # population=3 → pool 1, need 2): fall back to sampling with
-            # replacement — the copies diverge under combine/mutation
-            extra = rng.choice(len(every), size=need,
-                               replace=need > len(every))
-            islands[isl].extend(Individual(every[e].part.copy(),
-                                           every[e].fitness) for e in extra)
-
-    gen = 0
-    while time.monotonic() - t0 < time_limit:
-        gen += 1
-        for isl in range(n_islands):
-            pop = islands[isl]
-            if rng.random() < 0.9 and len(pop) >= 2:
-                # tournament parents
-                ia, ib = rng.choice(len(pop), size=2, replace=False)
-                pa = min(pop[ia], pop[ib], key=lambda x: x.fitness)
-                others = [p for j, p in enumerate(pop) if j not in (ia, ib)]
-                pb = min(others, key=lambda x: x.fitness) if others else pa
-                child = ML.combine(medium, pa.part, pb.part, k, eps,
-                                   seed + 7919 * gen + isl)
-            else:
-                src = pop[int(rng.integers(len(pop)))]
-                child = ML.vcycle(medium, src.part, k, eps,
-                                  seed + 104729 * gen + isl)
-            if enable_kabape:
-                child = kabape_refine(g, child, k, eps,
-                                      internal_bal=kabaE_internal_bal,
-                                      seed=seed + gen)
-            f = fit(child)
-            worst = max(range(len(pop)), key=lambda j: pop[j].fitness)
-            if f <= pop[worst].fitness:
-                pop[worst] = Individual(child, f)
-        # rumor spreading: each island pushes its best to a random island
-        for isl in range(n_islands):
-            best = min(islands[isl], key=lambda x: x.fitness)
-            tgt = int(rng.integers(n_islands))
-            if tgt != isl:
-                w = max(range(len(islands[tgt])),
-                        key=lambda j: islands[tgt][j].fitness)
-                if best.fitness < islands[tgt][w].fitness:
-                    islands[tgt][w] = Individual(best.part.copy(),
-                                                 best.fitness)
-        if on_generation is not None:
-            on_generation(gen, min(i.fitness for pop in islands for i in pop))
-
-    allind = [i for pop in islands for i in pop]
-    feas = [i for i in allind if is_feasible(g, i.part, k, eps)]
-    pool = feas if feas else allind
-    return min(pool, key=lambda x: x.fitness).part
+    fitness_fn = None
+    if optimize_comm_volume:
+        fitness_fn = lambda p: _fitness(g, p, k, True)        # noqa: E731
+    polish_fn = None
+    if enable_kabape:
+        polish_fn = lambda p, s: kabape_refine(                # noqa: E731
+            g, p, k, eps, internal_bal=kabaE_internal_bal, seed=s)
+    mcfg = MEM.MemeticConfig(
+        n_islands=n_islands, population=population, time_limit=time_limit,
+        generations=generations, migrate=migrate, quickstart=quickstart,
+        replacement="balanced" if enable_kabape else "worst")
+    state = MEM.evolve_islands(medium, k, eps, mcfg, seed,
+                               fitness_fn=fitness_fn, polish_fn=polish_fn,
+                               mesh=mesh, on_generation=on_generation)
+    return state.best_part()

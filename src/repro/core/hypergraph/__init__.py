@@ -13,7 +13,7 @@ from repro.core.hypergraph.coarsen import (clique_expansion, contract,
                                            coarsen_level, lp_clustering,
                                            project, star_expansion)
 from repro.core.hypergraph.driver import (HypergraphMedium, KahyparConfig,
-                                          PRESETS, kahypar,
+                                          PRESETS, kahypar, kahyparE,
                                           multilevel_hypergraph_partition)
 from repro.core.hypergraph.dist import (PARHYP_PRESETS, ShardedHypergraph,
                                         parhyp, parhyp_refine,
@@ -33,7 +33,7 @@ __all__ = [
     "balance", "block_weights", "connectivity", "cut_net", "evaluate",
     "is_feasible", "net_lambdas",
     "refine_hypergraph",
-    "HypergraphMedium", "KahyparConfig", "PRESETS", "kahypar",
+    "HypergraphMedium", "KahyparConfig", "PRESETS", "kahypar", "kahyparE",
     "multilevel_hypergraph_partition",
     "PARHYP_PRESETS", "ShardedHypergraph", "parhyp", "parhyp_refine",
     "shard_hypergraph",

@@ -130,6 +130,9 @@ class HypergraphMedium(ML.ViewCache):
         score = M.connectivity if self.obj == "km1" else M.cut_net
         return float(score(self.hg, part))
 
+    def imbalance(self, part: np.ndarray, k: int) -> float:
+        return M.balance(self.hg, part, k)
+
     def is_feasible(self, part: np.ndarray, k: int, eps: float) -> bool:
         return M.is_feasible(self.hg, part, k, eps)
 
@@ -160,3 +163,52 @@ def kahypar(hg: Hypergraph, k: int, eps: float = 0.03, preset: str = "eco",
     medium = HypergraphMedium(hg, cfg, objective)
     return ML.run(medium, k, eps, seed, vcycles=vcycles,
                   time_limit=time_limit, input_partition=input_partition)
+
+
+def kahyparE(hg: Hypergraph, k: int, eps: float = 0.03, preset: str = "eco",
+             seed: int = 0, objective: str = "km1", n_islands: int = 2,
+             population: int = 2, time_limit: float = 10.0,
+             generations: Optional[int] = None, migrate: bool = True,
+             mesh=None, on_generation=None) -> np.ndarray:
+    """The ``kahyparE`` program: memetic multilevel hypergraph partitioning
+    (the KaHyParE analogue of kaffpaE, DESIGN.md §10).
+
+    Rides the medium-generic island driver over `HypergraphMedium` for
+    either objective.  ``mesh`` lays the islands out as shards for
+    collective_permute migration; on a multi-device mesh the per-island
+    local search additionally polishes every child with the distributed
+    ``parhyp`` refinement round (preset-matched round count, cached
+    `ShardedHypergraph`), so the whole archipelago keeps the devices busy.
+    ``generations`` selects a deterministic generation count instead of the
+    ``time_limit`` wall-clock budget.
+    """
+    from repro.core import memetic as MEM
+    MEM.validate_memetic_params(n_islands, population, time_limit,
+                                generations)
+    if objective not in ("km1", "cut"):
+        raise ValueError(f"unknown objective {objective!r}")
+    if k <= 1:
+        return np.zeros(hg.n, dtype=np.int64)
+    medium = HypergraphMedium(hg, PRESETS[preset], objective)
+    polish_fn = None
+    if mesh is not None and np.asarray(mesh.devices).size > 1:
+        from jax.sharding import Mesh
+        from repro.core.hypergraph import dist as D
+        devs = np.asarray(mesh.devices).reshape(-1)
+        nets_mesh = Mesh(devs, ("nets",))
+        pre = "eco" if preset in ("eco", "strong") else "fast"
+        rounds = D.PARHYP_PRESETS[pre]["rounds"]
+        sh = D.shard_hypergraph(hg, len(devs))
+
+        def polish_fn(part, pseed):
+            return D.parhyp_refine(hg, part, k, eps, nets_mesh,
+                                   rounds=rounds, seed=pseed,
+                                   objective=objective, sh=sh)
+
+    cfg = MEM.MemeticConfig(n_islands=n_islands, population=population,
+                            time_limit=time_limit, generations=generations,
+                            migrate=migrate)
+    state = MEM.evolve_islands(medium, k, eps, cfg, seed,
+                               polish_fn=polish_fn, mesh=mesh,
+                               on_generation=on_generation)
+    return state.best_part()

@@ -52,6 +52,29 @@ def kaffpa_balance_NE(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
     return edge_cut(g, part), part
 
 
+def kaffpaE(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
+            imbalance: float, time_limit: float = 10.0,
+            suppress_output: bool = True, seed: int = 0, mode: int = ECO,
+            n_islands: int = 4, population: int = 4, mesh=None,
+            generations=None):
+    """Memetic partitioner call (the ``kaffpaE`` program on the
+    core/memetic island driver) → (edgecut, part).
+
+    Validates the memetic knobs up front (``n_islands``/``population``
+    must be positive, ``time_limit`` finite and >= 0 — 0 keeps the paper's
+    initial-population-only semantics); ``mesh`` lays the islands out as
+    shards for collective_permute migration.
+    """
+    from repro.core import evolve as E
+    from repro.core.partition import edge_cut
+    g = _graph(n, vwgt, xadj, adjcwgt, adjncy)
+    part = E.kaffpaE(g, nparts, imbalance, _MODE_NAMES[mode],
+                     n_islands=n_islands, population=population,
+                     time_limit=time_limit, seed=seed, mesh=mesh,
+                     generations=generations)
+    return edge_cut(g, part), part
+
+
 def kahypar(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
             imbalance: float, suppress_output: bool = True, seed: int = 0,
             mode: int = ECO, objective: str = "km1",
@@ -73,6 +96,35 @@ def kahypar(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
     part = H.kahypar(hg, nparts, imbalance, preset, seed=seed,
                      objective=objective, vcycles=vcycles,
                      time_limit=time_limit)
+    score = H.connectivity if objective == "km1" else H.cut_net
+    return score(hg, part), part
+
+
+def kahyparE(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
+             imbalance: float, time_limit: float = 10.0,
+             suppress_output: bool = True, seed: int = 0, mode: int = ECO,
+             objective: str = "km1", n_islands: int = 2,
+             population: int = 2, generations=None, mesh=None):
+    """Memetic hypergraph partitioner call (the ``kahyparE`` program,
+    DESIGN.md §10) → (objval, part).
+
+    Same array convention as the ``kahypar`` entry; ``objective`` ∈
+    {"km1", "cut"}.  The memetic knobs are validated up front;
+    ``generations`` selects a deterministic generation count instead of
+    the ``time_limit`` wall-clock budget, ``mesh`` shards the islands for
+    collective_permute migration (with the distributed parhyp round as the
+    per-island local search on multi-device meshes).
+    """
+    from repro.core import hypergraph as H
+    hg = H.Hypergraph.from_arrays(
+        n, np.asarray(eptr), np.asarray(eind),
+        None if ewgt is None else np.asarray(ewgt),
+        None if vwgt is None else np.asarray(vwgt))
+    preset = _MODE_NAMES[mode].replace("social", "")   # no social split here
+    part = H.kahyparE(hg, nparts, imbalance, preset, seed=seed,
+                      objective=objective, n_islands=n_islands,
+                      population=population, time_limit=time_limit,
+                      generations=generations, mesh=mesh)
     score = H.connectivity if objective == "km1" else H.cut_net
     return score(hg, part), part
 
@@ -103,19 +155,29 @@ def parhyp(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
 
 def node_separator(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
                    imbalance: float, suppress_output: bool = True,
-                   seed: int = 0, mode: int = ECO, multilevel: bool = True):
+                   seed: int = 0, mode: int = ECO, multilevel: bool = True,
+                   memetic: bool = False, time_limit: float = 5.0,
+                   n_islands: int = 2, population: int = 2):
     """→ (num_separator_vertices, separator ids).
 
     nparts == 2 (the recommended §5.2 setting) runs the multilevel
     separator engine (core/nodesep) which optimizes separator weight at
-    every hierarchy level; ``multilevel=False`` selects the post-hoc
-    two-step construction (partition, then vertex-cover the boundary —
-    the seed-parity baseline).  nparts > 2 always uses the pairwise
-    post-hoc construction.
+    every hierarchy level; ``memetic=True`` evolves separator states on
+    the memetic island driver instead (DESIGN.md §10);
+    ``multilevel=False`` selects the post-hoc two-step construction
+    (partition, then vertex-cover the boundary — the seed-parity
+    baseline).  nparts > 2 always uses the pairwise post-hoc construction.
     """
     from repro.core import kaffpa as K
     from repro.core import separator as S
     g = _graph(n, vwgt, xadj, adjcwgt, adjncy)
+    if nparts == 2 and memetic:
+        from repro.core.nodesep import memetic_node_separator
+        sep, _ = memetic_node_separator(g, imbalance, _MODE_NAMES[mode],
+                                        seed=seed, n_islands=n_islands,
+                                        population=population,
+                                        time_limit=time_limit)
+        return len(sep), sep
     if nparts == 2 and multilevel:
         from repro.core.nodesep import multilevel_node_separator
         sep, _ = multilevel_node_separator(g, imbalance, _MODE_NAMES[mode],

@@ -170,6 +170,21 @@ def balance_path(g: Graph, part: np.ndarray, k: int, eps: float,
     return part
 
 
+def kabapeE(g: Graph, k: int, eps: float = 0.03, preset: str = "fast",
+            n_islands: int = 4, population: int = 4,
+            time_limit: float = 10.0, seed: int = 0,
+            internal_bal: float = 0.01, **kwargs) -> np.ndarray:
+    """The memetic KaBaPE program: the same island driver as ``kaffpaE``
+    (core/memetic) with the negative-cycle polish on every child and the
+    balanced replacement rule (infeasible members are evicted first), so
+    the archipelago converges to strictly balanced partitions."""
+    from repro.core.evolve import kaffpaE
+    return kaffpaE(g, k, eps, preset, n_islands=n_islands,
+                   population=population, time_limit=time_limit, seed=seed,
+                   enable_kabape=True, kabaE_internal_bal=internal_bal,
+                   **kwargs)
+
+
 def kabape_refine(g: Graph, part: np.ndarray, k: int, eps: float = 0.0,
                   internal_bal: float = 0.01, rounds: int = 3,
                   seed: int = 0) -> np.ndarray:

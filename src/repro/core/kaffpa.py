@@ -166,6 +166,10 @@ class GraphMedium(ML.ViewCache):
     def objective(self, part: np.ndarray) -> float:
         return float(edge_cut(self.g, part))
 
+    def imbalance(self, part: np.ndarray, k: int) -> float:
+        from repro.core.partition import balance
+        return balance(self.g, part, k)
+
     def is_feasible(self, part: np.ndarray, k: int, eps: float) -> bool:
         return is_feasible(self.g, part, k, eps)
 

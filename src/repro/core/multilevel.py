@@ -150,6 +150,11 @@ class Medium(Protocol):
 
     def objective(self, part: np.ndarray) -> float: ...
 
+    def imbalance(self, part: np.ndarray, k: int) -> float:
+        """Max block weight over the ideal bound (feasible iff <= 1+eps) —
+        the memetic engine's fitness tie-breaker."""
+        ...
+
     def is_feasible(self, part: np.ndarray, k: int, eps: float) -> bool: ...
 
 
@@ -286,6 +291,29 @@ def multilevel(medium: Medium, k: int, eps: float, seed: int) -> np.ndarray:
     levels = build_hierarchy(medium, k, seed)
     part_c = initial_partition(levels[-1], k, eps, seed)
     return uncoarsen(levels, part_c, k, eps, seed)
+
+
+def population(medium: Medium, k: int, eps: float, seed: int, size: int,
+               stride: int = 31) -> List[np.ndarray]:
+    """Independent multilevel runs at strided seeds — the initial-population
+    hook for the memetic island driver.  All runs share the medium's cached
+    level-0 device views (and each run's tournament shares one compile), so
+    growing a population is cheaper than ``size`` cold starts.
+
+    Each member gets the preset's full V-cycle schedule, exactly as `run`
+    applies it — so member j is bit-identical to ``run(medium, k, eps,
+    seed + stride*j)`` without a time budget.  That identity (member 0 at
+    the base seed == one single run) is what makes the memetic drivers
+    structurally never worse than a single run at any preset."""
+    ncyc = medium.params.vcycles
+    out = []
+    for j in range(size):
+        s = seed + stride * j
+        part = multilevel(medium, k, eps, s)
+        for cyc in range(1, ncyc):
+            part = vcycle(medium, part, k, eps, s + 7919 * cyc)
+        out.append(part)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,8 @@ seed-parity baseline.
 """
 from repro.core.nodesep.driver import (NodesepConfig, PRESETS,
                                        SeparatorMedium,
+                                       memetic_node_separator,
+                                       memetic_nodesep_labels,
                                        multilevel_node_separator,
                                        nodesep_labels, split_labels)
 from repro.core.nodesep.refine import (SEP, boundary_to_separator,
@@ -25,6 +27,7 @@ from repro.core.nodesep.refine import (SEP, boundary_to_separator,
 __all__ = [
     "NodesepConfig", "PRESETS", "SEP", "SeparatorMedium",
     "boundary_to_separator", "flow_separator_polish",
+    "memetic_node_separator", "memetic_nodesep_labels",
     "multilevel_node_separator", "nodesep_labels",
     "refine_separator", "refine_separator_batch", "sep_affinity_coo",
     "sep_affinity_ell", "separator_caps", "separator_invariant_ok",

@@ -216,6 +216,13 @@ class SeparatorMedium(ML.ViewCache):
     def objective(self, part: np.ndarray) -> float:
         return float(separator_weight(self.g, part))
 
+    def imbalance(self, part: np.ndarray, k: int) -> float:
+        labels = np.asarray(part)
+        wa = int(self.g.vwgt[labels == 0].sum())
+        wb = int(self.g.vwgt[labels == 1].sum())
+        lmax = np.ceil(self.g.total_vwgt() / 2.0)
+        return float(max(wa, wb)) / max(lmax, 1.0)
+
     def is_feasible(self, part: np.ndarray, k: int, eps: float) -> bool:
         return (separator_is_feasible(self.g, part, eps)
                 and separator_invariant_ok(self.g, part))
@@ -261,3 +268,38 @@ def nodesep_labels(g: Graph, eps: float = 0.20, preset: str = "eco",
     medium = SeparatorMedium(g, PRESETS[preset])
     return ML.run(medium, 2, eps, seed, vcycles=vcycles,
                   time_limit=time_limit)
+
+
+def memetic_nodesep_labels(g: Graph, eps: float = 0.20, preset: str = "eco",
+                           seed: int = 0, n_islands: int = 2,
+                           population: int = 2, time_limit: float = 5.0,
+                           generations: Optional[int] = None,
+                           migrate: bool = True, mesh=None) -> np.ndarray:
+    """Memetic separator mode (DESIGN.md §10): the island driver over
+    `SeparatorMedium` — the engine's protected-coarsening combine keeps
+    both parents' 3-label states representable, so offspring separators
+    are never heavier than the seeding parent."""
+    from repro.core import memetic as MEM
+    MEM.validate_memetic_params(n_islands, population, time_limit,
+                                generations)
+    if g.n == 0:
+        return np.zeros(0, dtype=np.int64)
+    medium = SeparatorMedium(g, PRESETS[preset])
+    cfg = MEM.MemeticConfig(n_islands=n_islands, population=population,
+                            time_limit=time_limit, generations=generations,
+                            migrate=migrate)
+    state = MEM.evolve_islands(medium, 2, eps, cfg, seed, mesh=mesh)
+    return state.best_part()
+
+
+def memetic_node_separator(g: Graph, eps: float = 0.20, preset: str = "eco",
+                           seed: int = 0, n_islands: int = 2,
+                           population: int = 2, time_limit: float = 5.0,
+                           generations: Optional[int] = None,
+                           migrate: bool = True, mesh=None
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Memetic ``node_separator`` (2-way): (separator_ids, part2)."""
+    return split_labels(memetic_nodesep_labels(
+        g, eps, preset, seed, n_islands=n_islands, population=population,
+        time_limit=time_limit, generations=generations, migrate=migrate,
+        mesh=mesh))

@@ -1,0 +1,285 @@
+"""The memetic engine (core/memetic): deterministic tie-breaking,
+entry-point validation, migration topology (independence without
+migration, collective ring with it), mesh-vs-host bit-exactness, and the
+kahyparE / kabapeE / memetic-separator fronts."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+from jax.sharding import Mesh
+
+from repro.core import interface
+from repro.core.evolve import kaffpaE
+from repro.core.kabape import kabapeE
+from repro.core.kaffpa import PRESETS as GPRESETS, GraphMedium, kaffpa
+from repro.core.hypergraph import (connectivity, cut_net, kahypar, kahyparE)
+from repro.core.hypergraph import metrics as HM
+from repro.core.memetic import (Individual, MemeticConfig, best_index,
+                                evolve_islands, island_seed, ring_roll,
+                                ring_roll_host, validate_memetic_params,
+                                worst_index)
+from repro.core.nodesep import (SEP, memetic_node_separator,
+                                multilevel_node_separator,
+                                separator_invariant_ok,
+                                separator_is_feasible)
+from repro.core.partition import edge_cut, is_feasible
+from repro.io.generators import grid2d, planted_hypergraph
+
+GRID = grid2d(10, 10)
+HG = planted_hypergraph(150, 220, blocks=4, seed=7)
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _mesh1() -> Mesh:
+    return Mesh(np.array(jax.devices()[:1]), ("islands",))
+
+
+# -- deterministic tie-breaking (satellite bugfix) ---------------------------
+
+def test_fitness_tiebreak_independent_of_insertion_order():
+    """Equal-fitness individuals must rank by balance then stamp, not by
+    population insertion order (the old loop's min/max over fitness alone
+    made trajectories irreproducible)."""
+    a = Individual(np.zeros(4, np.int64), 10.0, balance=1.02, stamp=7)
+    b = Individual(np.ones(4, np.int64), 10.0, balance=1.00, stamp=9)
+    c = Individual(np.full(4, 2, np.int64), 10.0, balance=1.02, stamp=3)
+    for pop in ([a, b, c], [c, b, a], [b, c, a], [c, a, b]):
+        assert pop[best_index(pop)] is b       # balance breaks the tie
+        assert pop[worst_index(pop)] is a      # stamp breaks balance ties
+
+    def run(order):
+        pop = list(order)
+        w = worst_index(pop)
+        child = Individual(np.zeros(4, np.int64), 10.0, 1.01, stamp=5)
+        if child.key() <= pop[w].key():
+            pop[w] = child
+        return {i.stamp for i in pop}
+
+    assert run([a, b, c]) == run([c, b, a]) == {3, 5, 9}
+
+
+def test_population_trajectory_reproducible():
+    """Two identical generations-mode runs produce identical partitions."""
+    kw = dict(n_islands=2, population=2, generations=2, seed=13)
+    p1 = kaffpaE(GRID, 4, 0.03, "fast", **kw)
+    p2 = kaffpaE(GRID, 4, 0.03, "fast", **kw)
+    assert np.array_equal(p1, p2)
+
+
+# -- entry-point validation (satellite bugfix) --------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(n_islands=0), dict(n_islands=-2), dict(population=0),
+    dict(time_limit=-1.0), dict(time_limit=float("nan")),
+    dict(generations=-1),
+])
+def test_validate_memetic_params_rejects(kw):
+    base = dict(n_islands=2, population=2, time_limit=1.0, generations=None)
+    base.update(kw)
+    with pytest.raises(ValueError):
+        validate_memetic_params(**base)
+
+
+def test_entry_points_validate_before_work():
+    with pytest.raises(ValueError):
+        kaffpaE(GRID, 4, 0.03, "fast", n_islands=0, time_limit=1.0)
+    with pytest.raises(ValueError):
+        kaffpaE(GRID, 4, 0.03, "fast", time_limit=-2.0)
+    with pytest.raises(ValueError):
+        kabapeE(GRID, 4, 0.03, "fast", population=0, time_limit=1.0)
+    with pytest.raises(ValueError):
+        kahyparE(HG, 4, 0.03, "fast", n_islands=-1)
+    with pytest.raises(ValueError):
+        interface.kaffpaE(GRID.n, None, GRID.xadj, None, GRID.adjncy, 4,
+                          0.03, time_limit=-1.0)
+    with pytest.raises(ValueError):
+        interface.kahyparE(HG.n, HG.m, None, None, HG.eptr, HG.eind, 4,
+                           0.03, n_islands=0)
+    with pytest.raises(ValueError):
+        memetic_node_separator(GRID, 0.2, "fast", population=-1)
+
+
+def test_config_only_knobs_validated():
+    medium = GraphMedium(GRID, GPRESETS["fast"])
+    with pytest.raises(ValueError):
+        evolve_islands(medium, 4, 0.03,
+                       MemeticConfig(n_islands=2, population=2,
+                                     generations=1, migration_interval=0),
+                       seed=1)
+    with pytest.raises(ValueError):
+        evolve_islands(medium, 4, 0.03,
+                       MemeticConfig(n_islands=2, population=2,
+                                     generations=1, combine_prob=1.5),
+                       seed=1)
+    with pytest.raises(ValueError):
+        evolve_islands(medium, 4, 0.03,
+                       MemeticConfig(n_islands=1, population=1,
+                                     generations=0, replacement="nope"),
+                       seed=1)
+
+
+def test_infeasible_child_never_evicts_feasible_member():
+    """Replacement ranks feasibility first: an infeasible child with a
+    better objective must not displace a feasible incumbent (otherwise the
+    never-worse-than-single-run guarantee breaks)."""
+    from repro.core.memetic.driver import _replace_key
+    feas = Individual(np.zeros(4, np.int64), 100.0, 1.0, 1, feasible=True)
+    bad = Individual(np.ones(4, np.int64), 50.0, 1.5, 2, feasible=False)
+    for rule in ("worst", "balanced"):
+        rkey = _replace_key(MemeticConfig(replacement=rule))
+        pop = [feas]
+        w = max(range(len(pop)), key=lambda j: rkey(pop[j]))
+        assert not rkey(bad) <= rkey(pop[w]), rule
+        # ...but a feasible child still displaces the infeasible one
+        assert rkey(feas) <= rkey(bad), rule
+
+
+def test_time_limit_zero_still_valid():
+    """Paper semantics preserved: time_limit == 0 → initial population
+    only, not a ValueError."""
+    part = kaffpaE(GRID, 4, 0.03, "fast", n_islands=1, population=2,
+                   time_limit=0, seed=5)
+    assert is_feasible(GRID, part, 4, 0.03)
+
+
+# -- migration topology (satellite tests) -------------------------------------
+
+def test_no_migration_islands_evolve_independently():
+    """With migration off, island i's trajectory is bit-identical to a solo
+    run at island_seed(seed, i) — the per-island RNG-stream contract."""
+    seed = 11
+    medium = GraphMedium(GRID, GPRESETS["fast"])
+    multi = evolve_islands(
+        medium, 4, 0.03,
+        MemeticConfig(n_islands=3, population=2, generations=2,
+                      migrate=False), seed)
+    for i in range(3):
+        solo = evolve_islands(
+            GraphMedium(GRID, GPRESETS["fast"]), 4, 0.03,
+            MemeticConfig(n_islands=1, population=2, generations=2,
+                          migrate=False), island_seed(seed, i))
+        got, want = multi.islands[i], solo.islands[0]
+        assert len(got) == len(want)
+        for x, y in zip(got, want):
+            assert np.array_equal(x.part, y.part)
+            assert x.key() == y.key()
+
+
+def test_ring_roll_one_device_mesh_bit_identical_to_host():
+    """Acceptance: the 1-device mesh migration round (shard_map + ppermute)
+    equals the host-loop fallback bit for bit."""
+    rng = np.random.default_rng(0)
+    parts = rng.integers(0, 7, size=(4, 37)).astype(np.int32)
+    for shift in (1, 2, 3):
+        assert np.array_equal(ring_roll(parts, shift, _mesh1()),
+                              ring_roll_host(parts, shift))
+
+
+def test_ring_roll_semantics():
+    parts = np.arange(4, dtype=np.int32)[:, None] * np.ones((1, 3), np.int32)
+    out = ring_roll(parts, 1)
+    # island i receives island (i-1)'s best
+    assert [int(r[0]) for r in out] == [3, 0, 1, 2]
+
+
+@pytest.mark.slow
+def test_migration_4dev_mesh_never_worse_than_no_migration():
+    """4 fake devices: collective migration stays bit-identical to the host
+    ring, and the best objective is never worse than the no-migration run
+    on the CI cell."""
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core.memetic import ring_roll, ring_roll_host
+        from repro.core.evolve import kaffpaE
+        from repro.core.partition import edge_cut, is_feasible
+        from repro.io.generators import grid2d
+        assert len(jax.devices()) == 4
+        mesh = Mesh(np.array(jax.devices()), ("islands",))
+        rng = np.random.default_rng(1)
+        for I in (4, 8):                   # 1 and 2 islands per device
+            parts = rng.integers(0, 9, size=(I, 53)).astype(np.int32)
+            for shift in range(1, I):
+                assert np.array_equal(ring_roll(parts, shift, mesh),
+                                      ring_roll_host(parts, shift)), (I, shift)
+        g = grid2d(12, 12)
+        mig = kaffpaE(g, 4, 0.03, "fast", n_islands=4, population=2,
+                      generations=3, seed=3, mesh=mesh, migrate=True)
+        nomig = kaffpaE(g, 4, 0.03, "fast", n_islands=4, population=2,
+                        generations=3, seed=3, migrate=False)
+        assert is_feasible(g, mig, 4, 0.03)
+        assert edge_cut(g, mig) <= edge_cut(g, nomig), (
+            edge_cut(g, mig), edge_cut(g, nomig))
+        print("MIGRATION_OK", edge_cut(g, mig), edge_cut(g, nomig))
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "MIGRATION_OK" in r.stdout, r.stdout + r.stderr
+
+
+# -- kahyparE ----------------------------------------------------------------
+
+@pytest.mark.parametrize("objective,score", [("km1", connectivity),
+                                             ("cut", cut_net)])
+def test_kahyparE_never_worse_than_single_run(objective, score):
+    """Island 0's first member rides the single run's exact seed, and the
+    driver only ever improves — memetic <= single, both objectives."""
+    pe = kahyparE(HG, 4, 0.03, "fast", seed=1, objective=objective,
+                  n_islands=2, population=2, generations=2)
+    ps = kahypar(HG, 4, 0.03, "fast", seed=1, objective=objective)
+    assert HM.is_feasible(HG, pe, 4, 0.03)
+    assert score(HG, pe) <= score(HG, ps)
+
+
+def test_strong_preset_member0_matches_single_run():
+    """Initial population members get the preset's full V-cycle schedule
+    (multilevel.population), so even at vcycles=2 presets the memetic
+    result at generations=0 is bit-identical to one `kahypar` run — the
+    never-worse guarantee holds at every preset."""
+    hg = planted_hypergraph(100, 150, blocks=2, seed=9)
+    pe = kahyparE(hg, 2, 0.03, "strong", seed=4, n_islands=1, population=1,
+                  generations=0)
+    ps = kahypar(hg, 2, 0.03, "strong", seed=4)
+    assert np.array_equal(pe, ps)
+
+
+def test_interface_kahyparE():
+    objval, part = interface.kahyparE(
+        HG.n, HG.m, None, None, HG.eptr, HG.eind, 4, 0.03, seed=1,
+        generations=1)
+    assert objval == connectivity(HG, part)
+    assert HM.is_feasible(HG, part, 4, 0.03)
+
+
+def test_interface_kaffpaE():
+    cut, part = interface.kaffpaE(GRID.n, None, GRID.xadj, None, GRID.adjncy,
+                                  4, 0.03, seed=2, generations=1)
+    assert cut == edge_cut(GRID, part)
+    assert is_feasible(GRID, part, 4, 0.03)
+
+
+# -- kabapeE and the memetic separator mode -----------------------------------
+
+def test_kabapeE_strictly_balanced():
+    part = kabapeE(GRID, 4, eps=0.0, preset="fast", n_islands=1,
+                   population=2, generations=1, seed=4)
+    assert is_feasible(GRID, part, 4, 0.0)
+
+
+def test_memetic_node_separator_valid_and_never_worse():
+    sep, part2 = memetic_node_separator(GRID, 0.20, "fast", seed=2,
+                                        n_islands=2, population=2,
+                                        generations=1)
+    labels = part2.copy()
+    labels[sep] = SEP
+    assert separator_invariant_ok(GRID, labels)
+    assert separator_is_feasible(GRID, labels, 0.20)
+    sep_s, _ = multilevel_node_separator(GRID, 0.20, "fast", seed=2)
+    assert GRID.vwgt[sep].sum() <= GRID.vwgt[sep_s].sum()
