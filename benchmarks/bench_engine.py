@@ -1,9 +1,18 @@
-"""End-to-end engine benchmark → ``BENCH_engine.json``.
+"""End-to-end engine benchmark → ``BENCH_engine.json`` (+ trace artifacts).
 
 Times the engine-backed drivers (kaffpa / kahypar) on the fixed seeded
 instances the engine-parity test pins, and records wall-clock plus the
 achieved objective so the perf trajectory is tracked across PRs.  Invoked
 by ``python benchmarks/run.py --smoke`` (CI) or directly.
+
+Each cell is measured twice (DESIGN.md §11): first cold with observability
+disabled — the ``s`` field, comparable with the pre-PR wall times — then
+warm with an ``obs.Recorder`` attached (``s_obs``), which captures the
+per-cycle quality trajectory and pins that the recorder does not change
+results.  ``compile_count`` is the number of XLA backend compiles the cold
+run triggered (global ``obs.metrics`` delta via jax.monitoring).  The
+recorders are exported to ``BENCH_engine_trace.jsonl`` (event journal) and
+``BENCH_engine_trace.json`` (Chrome trace, open in Perfetto).
 
 The ``pre_refactor`` block stores the PR-2 measurements of the pre-engine
 drivers on this container (same instances/seeds) for comparison.
@@ -11,7 +20,11 @@ drivers on this container (same instances/seeds) for comparison.
 from __future__ import annotations
 
 import json
-import time
+
+try:
+    from benchmarks.common import run_metadata, timed_call
+except ImportError:                      # direct: python benchmarks/bench_engine.py
+    from common import run_metadata, timed_call
 
 
 # PR-2 baseline: the duplicated kaffpa/kahypar loops before the shared
@@ -25,13 +38,26 @@ PRE_REFACTOR = {
 }
 
 
-def _timed(fn, *args, **kw):
-    t0 = time.perf_counter()
-    out = fn(*args, **kw)
-    return out, time.perf_counter() - t0
+def _cell(name: str, fn, args, score, recorders: list) -> dict:
+    """Cold obs-disabled timing + warm obs-enabled rerun of one cell."""
+    import numpy as np
+    from repro import obs
+    c0 = obs.metrics.get("jax/compiles")
+    out, dt = timed_call(fn, *args)
+    compile_count = int(obs.metrics.get("jax/compiles") - c0)
+    rec = obs.Recorder(name)
+    out_obs, dt_obs = timed_call(fn, *args, report=rec)
+    assert np.array_equal(out, out_obs), f"recorder changed result: {name}"
+    recorders.append(rec)
+    cell = {"s": round(dt, 2), "s_obs": round(dt_obs, 2),
+            "compile_count": compile_count,
+            "trajectory": rec.trajectory("cycles")}
+    cell.update(score(out))
+    return cell
 
 
-def collect() -> dict:
+def collect(recorders: list) -> dict:
+    from repro import obs
     from repro.core.kaffpa import kaffpa
     from repro.core.partition import edge_cut, is_feasible
     from repro.core.hypergraph import connectivity, kahypar
@@ -39,43 +65,53 @@ def collect() -> dict:
     from repro.io.generators import (barabasi_albert, grid2d,
                                      planted_hypergraph)
 
+    obs.install_jax_compile_listener()
     g32 = grid2d(32, 32)
     ba = barabasi_albert(2048, 4, seed=1)
     hp = planted_hypergraph(400, 600, blocks=4, seed=11)
     res = {}
 
-    part, dt = _timed(kaffpa, g32, 4, 0.03, "eco", 3)
-    res["kaffpa_eco_grid32_k4"] = {
-        "s": round(dt, 2), "cut": edge_cut(g32, part),
-        "feasible": is_feasible(g32, part, 4, 0.03)}
-    part, dt = _timed(kaffpa, g32, 4, 0.03, "strong", 3)
-    res["kaffpa_strong_grid32_k4"] = {
-        "s": round(dt, 2), "cut": edge_cut(g32, part),
-        "feasible": is_feasible(g32, part, 4, 0.03)}
-    part, dt = _timed(kaffpa, ba, 8, 0.03, "ecosocial", 1)
-    res["kaffpa_ecosocial_ba2k_k8"] = {
-        "s": round(dt, 2), "cut": edge_cut(ba, part),
-        "feasible": is_feasible(ba, part, 8, 0.03)}
-    part, dt = _timed(kahypar, hp, 4, 0.03, "eco", 1)
-    res["kahypar_eco_hp400_k4"] = {
-        "s": round(dt, 2), "km1": connectivity(hp, part),
-        "feasible": HM.is_feasible(hp, part, 4, 0.03)}
-    part, dt = _timed(kahypar, hp, 2, 0.03, "eco", 1)
-    res["kahypar_eco_hp400_k2"] = {
-        "s": round(dt, 2), "km1": connectivity(hp, part),
-        "feasible": HM.is_feasible(hp, part, 2, 0.03)}
+    def gscore(g, k):
+        return lambda p: {"cut": edge_cut(g, p),
+                          "feasible": is_feasible(g, p, k, 0.03)}
+
+    def hscore(hg, k):
+        return lambda p: {"km1": connectivity(hg, p),
+                          "feasible": HM.is_feasible(hg, p, k, 0.03)}
+
+    res["kaffpa_eco_grid32_k4"] = _cell(
+        "kaffpa_eco_grid32_k4", kaffpa, (g32, 4, 0.03, "eco", 3),
+        gscore(g32, 4), recorders)
+    res["kaffpa_strong_grid32_k4"] = _cell(
+        "kaffpa_strong_grid32_k4", kaffpa, (g32, 4, 0.03, "strong", 3),
+        gscore(g32, 4), recorders)
+    res["kaffpa_ecosocial_ba2k_k8"] = _cell(
+        "kaffpa_ecosocial_ba2k_k8", kaffpa, (ba, 8, 0.03, "ecosocial", 1),
+        gscore(ba, 8), recorders)
+    res["kahypar_eco_hp400_k4"] = _cell(
+        "kahypar_eco_hp400_k4", kahypar, (hp, 4, 0.03, "eco", 1),
+        hscore(hp, 4), recorders)
+    res["kahypar_eco_hp400_k2"] = _cell(
+        "kahypar_eco_hp400_k2", kahypar, (hp, 2, 0.03, "eco", 1),
+        hscore(hp, 2), recorders)
     return res
 
 
 def main(out_path: str = "BENCH_engine.json") -> dict:
-    engine = collect()
-    report = {"engine": engine, "pre_refactor": PRE_REFACTOR}
+    from repro.obs import trace as obs_trace
+    recorders: list = []
+    engine = collect(recorders)
+    report = {"engine": engine, "pre_refactor": PRE_REFACTOR,
+              "meta": run_metadata()}
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
+    base = out_path[:-5] if out_path.endswith(".json") else out_path
+    obs_trace.write_jsonl(recorders, base + "_trace.jsonl")
+    obs_trace.write_chrome_trace(recorders, base + "_trace.json")
     for name, cell in engine.items():
-        base = PRE_REFACTOR.get(name, {})
-        print(f"{name}: {cell} (pre-refactor: {base})", flush=True)
-    print(f"wrote {out_path}")
+        pre = PRE_REFACTOR.get(name, {})
+        print(f"{name}: {cell} (pre-refactor: {pre})", flush=True)
+    print(f"wrote {out_path}, {base}_trace.jsonl, {base}_trace.json")
     return report
 
 

@@ -17,15 +17,13 @@ benchmarks/run.py --smoke`` (CI) or directly.
 from __future__ import annotations
 
 import json
-import time
+
+try:
+    from benchmarks.common import run_metadata, timed_call as _timed
+except ImportError:                      # direct: python benchmarks/bench_memetic.py
+    from common import run_metadata, timed_call as _timed
 
 GENERATIONS = 3              # deterministic memetic budget per smoke cell
-
-
-def _timed(fn, *args, **kw):
-    t0 = time.perf_counter()
-    out = fn(*args, **kw)
-    return out, time.perf_counter() - t0
 
 
 def collect() -> dict:
@@ -84,7 +82,8 @@ def collect() -> dict:
 
 
 def main(out_path: str = "BENCH_memetic.json") -> dict:
-    report = {"memetic": collect(), "generations": GENERATIONS}
+    report = {"memetic": collect(), "generations": GENERATIONS,
+              "meta": run_metadata()}
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
     for name, cell in report["memetic"].items():

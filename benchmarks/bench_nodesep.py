@@ -10,7 +10,11 @@ or directly.
 from __future__ import annotations
 
 import json
-import time
+
+try:
+    from benchmarks.common import run_metadata, timed_call
+except ImportError:                      # direct: python benchmarks/bench_nodesep.py
+    from common import run_metadata, timed_call
 
 EPS = (0.05, 0.20)
 SEED = 1
@@ -35,15 +39,13 @@ def collect() -> dict:
     res = {}
     for name, g in _instances().items():
         for eps in EPS:
-            t0 = time.perf_counter()
-            labels = nodesep_labels(g, eps, PRESET, seed=SEED)
-            ml_s = time.perf_counter() - t0
+            labels, ml_s = timed_call(nodesep_labels, g, eps, PRESET,
+                                      seed=SEED)
             ml_w = separator_weight(g, labels)
             ml_ok = bool(separator_invariant_ok(g, labels)
                          and separator_is_feasible(g, labels, eps))
-            t0 = time.perf_counter()
-            sep, part = node_separator(g, eps, PRESET, seed=SEED)
-            ph_s = time.perf_counter() - t0
+            (sep, part), ph_s = timed_call(node_separator, g, eps, PRESET,
+                                           seed=SEED)
             ph_w = int(g.vwgt[sep].sum())
             ph_ok = bool(verify_separator(g, part, sep, 2))
             res[f"{name}_eps{eps:g}"] = {
@@ -64,7 +66,8 @@ def main(out_path: str = "BENCH_nodesep.json") -> dict:
     report = {"nodesep": cells,
               "summary": {"cells": len(cells), "ml_strictly_better": wins,
                           "ties": ties,
-                          "ml_never_worse": wins + ties == len(cells)}}
+                          "ml_never_worse": wins + ties == len(cells)},
+              "meta": run_metadata()}
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
     for name, cell in cells.items():

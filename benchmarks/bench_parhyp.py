@@ -10,15 +10,13 @@ distributed quality within 5% of sequential on every cell.  Invoked by
 from __future__ import annotations
 
 import json
-import time
+
+try:
+    from benchmarks.common import run_metadata, timed_call as _timed
+except ImportError:                      # direct: python benchmarks/bench_parhyp.py
+    from common import run_metadata, timed_call as _timed
 
 QUALITY_SLACK = 1.05         # distributed ≤ 5% over sequential (smoke gate)
-
-
-def _timed(fn, *args, **kw):
-    t0 = time.perf_counter()
-    out = fn(*args, **kw)
-    return out, time.perf_counter() - t0
 
 
 def cells():
@@ -60,7 +58,8 @@ def collect() -> dict:
 
 
 def main(out_path: str = "BENCH_parhyp.json") -> dict:
-    report = {"parhyp": collect(), "quality_slack": QUALITY_SLACK}
+    report = {"parhyp": collect(), "quality_slack": QUALITY_SLACK,
+              "meta": run_metadata()}
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
     for name, cell in report["parhyp"].items():

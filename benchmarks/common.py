@@ -1,20 +1,68 @@
-"""Shared benchmark helpers: timing + CSV emission.
+"""Shared benchmark helpers: timing, run metadata + CSV emission.
 
 Every bench prints ``name,us_per_call,derived`` rows (derived = the
-paper-relevant quality metric: cut, replication, QAP, fill-in, …).
+paper-relevant quality metric: cut, replication, QAP, fill-in, …) and
+stamps its JSON report with ``run_metadata()`` so BENCH_*.json artifacts
+record which jax/backend/host produced them.
 """
 from __future__ import annotations
 
 import time
 
 
+def _block(out):
+    """Wait for any async device work hiding in ``out`` (pytree-safe).
+
+    JAX dispatch is asynchronous: without this, a timed region can stop
+    the clock while the device is still computing.  Works on arbitrary
+    pytrees and is a no-op for host values (numpy arrays, scalars).
+    """
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return out
+
+
 def timed(fn, *args, repeat: int = 1, **kw):
+    """Run ``fn`` ``repeat`` times, blocking on the result each time, and
+    return ``(last_out, mean_microseconds)``."""
     t0 = time.perf_counter()
     out = None
     for _ in range(repeat):
-        out = fn(*args, **kw)
+        out = _block(fn(*args, **kw))
     dt = (time.perf_counter() - t0) / repeat
     return out, dt * 1e6
+
+
+def timed_call(fn, *args, **kw):
+    """Single synchronized call → ``(out, seconds)``."""
+    t0 = time.perf_counter()
+    out = _block(fn(*args, **kw))
+    return out, time.perf_counter() - t0
+
+
+def run_metadata() -> dict:
+    """Environment stamp for BENCH_*.json reports (DESIGN.md §11)."""
+    import datetime
+    import platform
+    import socket
+    meta = {
+        "hostname": socket.gethostname(),
+        "python": platform.python_version(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+    try:
+        import jax
+        import jaxlib
+        meta.update(jax=jax.__version__, jaxlib=jaxlib.__version__,
+                    backend=jax.default_backend(),
+                    device_count=jax.device_count())
+    except Exception:  # pragma: no cover - jax is a hard dep in practice
+        pass
+    return meta
 
 
 def row(name: str, us: float, derived) -> str:

@@ -54,6 +54,17 @@ def main():
                            nparts=2, imbalance=0.03, seed=0, mode=api.ECO)
     print(f"library kaffpa(k=2): edgecut={cut}")
 
+    # --- observability (DESIGN.md §11): spans, counters, trajectories
+    from repro import obs
+    rec = obs.Recorder("quickstart")
+    cut, part = api.kaffpa(g.n, None, g.xadj, None, g.adjncy,
+                           nparts=4, imbalance=0.03, seed=0, mode=api.ECO,
+                           report=rec)
+    print(f"recorded run: edgecut={cut} compiles={rec.compile_count} "
+          f"cycles={rec.trajectory('cycles')}")
+    obs.write_chrome_trace(rec, "/tmp/quickstart_trace.json")
+    print("wrote /tmp/quickstart_trace.json (open in https://ui.perfetto.dev)")
+
 
 if __name__ == "__main__":
     main()

@@ -37,10 +37,15 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 
+from repro import obs
 from repro.core.csr import _pow2_pad
 from repro.core import lp as lp_mod
 from repro.core.hypergraph.container import Hypergraph
 from repro.core.hypergraph import metrics as M
+
+# psums issued per distributed refinement round: the Φ(e,b) histogram plus
+# two gain partials (aff/rem for km1, joins/breaks for cut-net)
+_PSUMS_PER_ROUND = 3
 
 _NEG = -1e30
 _NOISE = 1e-4
@@ -303,22 +308,31 @@ def parhyp_refine(hg: Hypergraph, part: np.ndarray, k: int,
         mesh = Mesh(np.array(jax.devices()), (axis,))
     n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names
                             if a == axis]))
+    rec = obs.current()
     sh = sh if sh is not None else shard_hypergraph(hg, n_shards)
     from repro.core.hypergraph.refine import _caps_for
     cap = jnp.asarray(_caps_for(hg, k, eps), jnp.float32)
     labels0 = np.zeros(sh.n_pad, dtype=np.int32)
     labels0[:hg.n] = part
-    out, _ = _parhyp_refine_jit(mesh, jnp.asarray(sh.pv), jnp.asarray(sh.pe),
-                                jnp.asarray(sh.mask), jnp.asarray(sh.netw),
-                                jnp.asarray(sh.esize), jnp.asarray(sh.vwgt),
-                                jnp.asarray(labels0), cap,
-                                jax.random.PRNGKey(seed),
-                                jnp.asarray(force_balance), sh.rows_v, k,
-                                rounds, n_shards, axis, objective)
-    out = np.asarray(out, dtype=np.int64)[:hg.n]
+    with rec.span("parhyp_refine", n=hg.n, rounds=rounds, shards=n_shards):
+        out, _ = _parhyp_refine_jit(mesh, jnp.asarray(sh.pv),
+                                    jnp.asarray(sh.pe),
+                                    jnp.asarray(sh.mask),
+                                    jnp.asarray(sh.netw),
+                                    jnp.asarray(sh.esize),
+                                    jnp.asarray(sh.vwgt),
+                                    jnp.asarray(labels0), cap,
+                                    jax.random.PRNGKey(seed),
+                                    jnp.asarray(force_balance), sh.rows_v, k,
+                                    rounds, n_shards, axis, objective)
+        out = np.asarray(out, dtype=np.int64)[:hg.n]
+    rec.count("parhyp/dist_rounds", rounds)
+    # per round: Φ + two gain partials; plus the one-off wtot and final Φ
+    rec.count("parhyp/psum_rounds", _PSUMS_PER_ROUND * rounds + 2)
     score = M.connectivity if objective == "km1" else M.cut_net
     if score(hg, out) <= score(hg, part) or force_balance:
         return out
+    rec.count("parhyp/rounds_rejected")
     return np.asarray(part, dtype=np.int64)
 
 
@@ -335,8 +349,8 @@ PARHYP_PRESETS = {
 
 def parhyp(hg: Hypergraph, k: int, eps: float = 0.03,
            preconfiguration: str = "fast", seed: int = 0,
-           mesh: Optional[Mesh] = None, objective: str = "km1"
-           ) -> np.ndarray:
+           mesh: Optional[Mesh] = None, objective: str = "km1",
+           report=None) -> np.ndarray:
     """The ``parhyp`` program: distributed multilevel hypergraph
     partitioning (DESIGN.md §9).
 
@@ -345,6 +359,8 @@ def parhyp(hg: Hypergraph, k: int, eps: float = 0.03,
     distributed LP round as the refinement engine at every level and the
     sequential force-balance refiner as the feasibility repair fallback —
     including level 0 of single-level hierarchies (small inputs).
+    ``report`` is an optional ``obs.Recorder`` capturing the distributed
+    rounds, psum counts and per-level quality (DESIGN.md §11).
     """
     if objective not in ("km1", "cut"):
         raise ValueError(f"unknown objective {objective!r}")
@@ -358,26 +374,42 @@ def parhyp(hg: Hypergraph, k: int, eps: float = 0.03,
     cfg = PRESETS[pc["preset"]]
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), ("nets",))
-    levels = ML.build_hierarchy(HypergraphMedium(hg, cfg, objective), k,
-                                seed)
-    part = ML.initial_partition(levels[-1], k, eps, seed)
+    with obs.use(report):
+        rec = obs.current()
+        with rec.span("parhyp", n=hg.n, k=k,
+                      preconfiguration=preconfiguration):
+            levels = ML.build_hierarchy(HypergraphMedium(hg, cfg, objective),
+                                        k, seed)
+            part = ML.initial_partition(levels[-1], k, eps, seed)
 
-    def refine_level(hg_fine: Hypergraph, part: np.ndarray,
-                     li: int) -> np.ndarray:
-        part = parhyp_refine(hg_fine, part, k, eps, mesh,
-                             rounds=pc["rounds"], seed=seed + li,
-                             objective=objective)
-        if not M.is_feasible(hg_fine, part, k, eps):
-            part = refine_hypergraph(hg_fine, part, k, eps, rounds=6,
-                                     seed=seed + li, objective=objective,
-                                     force_balance=True)
-        return part
+            def refine_level(hg_fine: Hypergraph, part: np.ndarray,
+                             li: int) -> np.ndarray:
+                part = parhyp_refine(hg_fine, part, k, eps, mesh,
+                                     rounds=pc["rounds"], seed=seed + li,
+                                     objective=objective)
+                if not M.is_feasible(hg_fine, part, k, eps):
+                    part = refine_hypergraph(hg_fine, part, k, eps, rounds=6,
+                                             seed=seed + li,
+                                             objective=objective,
+                                             force_balance=True)
+                    rec.count("parhyp/repairs")
+                return part
 
-    for li in range(len(levels) - 1, 0, -1):
-        part = project(part, levels[li].cl)
-        part = refine_level(levels[li - 1].medium.hg, part, li)
-    if len(levels) == 1:
-        # single-level hierarchy: the loop above is empty — still refine
-        # and repair at level 0 (the parhip bug this PR fixes)
-        part = refine_level(hg, part, 0)
+            score = M.connectivity if objective == "km1" else M.cut_net
+            for li in range(len(levels) - 1, 0, -1):
+                part = project(part, levels[li].cl)
+                fine = levels[li - 1].medium.hg
+                with rec.span("parhyp_level", level=li - 1, n=fine.n):
+                    part = refine_level(fine, part, li)
+                if rec.enabled:
+                    rec.point("parhyp", level=li - 1,
+                              objective=float(score(fine, part)))
+            if len(levels) == 1:
+                # single-level hierarchy: the loop above is empty — still
+                # refine and repair at level 0 (the parhip bug PR 4 fixed)
+                with rec.span("parhyp_level", level=0, n=hg.n):
+                    part = refine_level(hg, part, 0)
+                if rec.enabled:
+                    rec.point("parhyp", level=0,
+                              objective=float(score(hg, part)))
     return part

@@ -48,13 +48,14 @@ class HypergraphMedium(ML.ViewCache):
     """The hypergraph adapter for the shared multilevel engine."""
 
     def __init__(self, hg: Hypergraph, cfg: KahyparConfig,
-                 objective: str = "km1"):
+                 objective: str = "km1", recorder=None):
         if objective not in ("km1", "cut"):
             raise ValueError(f"unknown objective {objective!r}")
         from repro.core.refine import default_use_kernel
         self.hg = hg
         self.cfg = cfg
         self.obj = objective
+        self.recorder = recorder
         self.use_kernel = (default_use_kernel() if cfg.use_kernel is None
                            else cfg.use_kernel)
 
@@ -70,7 +71,7 @@ class HypergraphMedium(ML.ViewCache):
             initial_tries=cfg.initial_tries, vcycles=cfg.vcycles,
             contraction_stop_factor=cfg.contraction_stop_factor,
             cluster_weight_factor=cfg.cluster_weight_factor,
-            stop_n_floor=48)
+            stop_n_floor=48, recorder=self.recorder)
 
     def total_vwgt(self) -> int:
         return self.hg.total_vwgt()
@@ -84,7 +85,8 @@ class HypergraphMedium(ML.ViewCache):
 
     def contract(self, clusters: np.ndarray):
         coarse, cl = C.contract(self.hg, clusters)
-        return HypergraphMedium(coarse, self.cfg, self.obj), cl
+        return HypergraphMedium(coarse, self.cfg, self.obj,
+                                recorder=self.recorder), cl
 
     # -- device views ------------------------------------------------------
     def build_views(self):
@@ -98,11 +100,19 @@ class HypergraphMedium(ML.ViewCache):
         hc, ell = self.views
         if force_balance is None:
             force_balance = not M.is_feasible(self.hg, part, k, eps)
-        return refine_hypergraph(self.hg, part, k, eps,
-                                 rounds=self.cfg.refine_rounds, seed=seed,
-                                 objective=self.obj,
-                                 force_balance=force_balance,
-                                 use_kernel=self.use_kernel, hc=hc, ell=ell)
+        out = refine_hypergraph(self.hg, part, k, eps,
+                                rounds=self.cfg.refine_rounds, seed=seed,
+                                objective=self.obj,
+                                force_balance=force_balance,
+                                use_kernel=self.use_kernel, hc=hc, ell=ell)
+        rec = ML.recorder_of(self)
+        if rec.enabled:
+            rec.count("refine/rounds", self.cfg.refine_rounds)
+            rec.count("refine/moves",
+                      int(np.sum(out != np.asarray(part, dtype=np.int64))))
+            if force_balance:
+                rec.count("refine/forced_balance")
+        return out
 
     def refine_batch(self, parts: Sequence[np.ndarray], k: int, eps: float,
                      seed: int) -> List[np.ndarray]:
@@ -147,20 +157,22 @@ def kahypar(hg: Hypergraph, k: int, eps: float = 0.03, preset: str = "eco",
             seed: int = 0, objective: str = "km1",
             input_partition: Optional[np.ndarray] = None,
             vcycles: Optional[int] = None,
-            time_limit: float = 0.0) -> np.ndarray:
+            time_limit: float = 0.0, report=None) -> np.ndarray:
     """The ``kahypar`` program: multilevel hypergraph partitioning.
 
     ``objective`` ∈ {"km1", "cut"}; returns a block id per vertex.
     ``vcycles`` overrides the preset's iterated-multilevel count and
     ``time_limit`` enables repeated restarts under a wall-clock budget —
-    both engine features shared with kaffpa.
+    both engine features shared with kaffpa.  ``report`` is an optional
+    ``obs.Recorder`` capturing this run's spans, counters and quality
+    trajectory (DESIGN.md §11).
     """
     if objective not in ("km1", "cut"):
         raise ValueError(f"unknown objective {objective!r}")
     cfg = PRESETS[preset]
     if k <= 1:
         return np.zeros(hg.n, dtype=np.int64)
-    medium = HypergraphMedium(hg, cfg, objective)
+    medium = HypergraphMedium(hg, cfg, objective, recorder=report)
     return ML.run(medium, k, eps, seed, vcycles=vcycles,
                   time_limit=time_limit, input_partition=input_partition)
 
@@ -169,7 +181,7 @@ def kahyparE(hg: Hypergraph, k: int, eps: float = 0.03, preset: str = "eco",
              seed: int = 0, objective: str = "km1", n_islands: int = 2,
              population: int = 2, time_limit: float = 10.0,
              generations: Optional[int] = None, migrate: bool = True,
-             mesh=None, on_generation=None) -> np.ndarray:
+             mesh=None, on_generation=None, report=None) -> np.ndarray:
     """The ``kahyparE`` program: memetic multilevel hypergraph partitioning
     (the KaHyParE analogue of kaffpaE, DESIGN.md §10).
 
@@ -189,7 +201,8 @@ def kahyparE(hg: Hypergraph, k: int, eps: float = 0.03, preset: str = "eco",
         raise ValueError(f"unknown objective {objective!r}")
     if k <= 1:
         return np.zeros(hg.n, dtype=np.int64)
-    medium = HypergraphMedium(hg, PRESETS[preset], objective)
+    medium = HypergraphMedium(hg, PRESETS[preset], objective,
+                              recorder=report)
     polish_fn = None
     if mesh is not None and np.asarray(mesh.devices).size > 1:
         from jax.sharding import Mesh

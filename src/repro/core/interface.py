@@ -11,6 +11,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.csr import Graph
 
 # mode constants (paper §5.2)
@@ -31,24 +32,29 @@ def _graph(n, vwgt, xadj, adjcwgt, adjncy) -> Graph:
 
 def kaffpa(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
            imbalance: float, suppress_output: bool = True, seed: int = 0,
-           mode: int = ECO):
-    """Main partitioner call → (edgecut, part)."""
+           mode: int = ECO, report=None):
+    """Main partitioner call → (edgecut, part).
+
+    ``report`` is an optional ``obs.Recorder`` capturing spans, counters
+    and the quality trajectory of this run (DESIGN.md §11).
+    """
     from repro.core import kaffpa as K
     from repro.core.partition import edge_cut
     g = _graph(n, vwgt, xadj, adjcwgt, adjncy)
-    part = K.kaffpa(g, nparts, imbalance, _MODE_NAMES[mode], seed=seed)
+    part = K.kaffpa(g, nparts, imbalance, _MODE_NAMES[mode], seed=seed,
+                    report=report)
     return edge_cut(g, part), part
 
 
 def kaffpa_balance_NE(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
                       imbalance: float, suppress_output: bool = True,
-                      seed: int = 0, mode: int = ECO):
+                      seed: int = 0, mode: int = ECO, report=None):
     """Node+edge balanced partitioner call → (edgecut, part)."""
     from repro.core import kaffpa as K
     from repro.core.partition import edge_cut
     g = _graph(n, vwgt, xadj, adjcwgt, adjncy)
     part = K.kaffpa(g, nparts, imbalance, _MODE_NAMES[mode], seed=seed,
-                    balance_edges=True)
+                    balance_edges=True, report=report)
     return edge_cut(g, part), part
 
 
@@ -56,7 +62,7 @@ def kaffpaE(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
             imbalance: float, time_limit: float = 10.0,
             suppress_output: bool = True, seed: int = 0, mode: int = ECO,
             n_islands: int = 4, population: int = 4, mesh=None,
-            generations=None):
+            generations=None, report=None):
     """Memetic partitioner call (the ``kaffpaE`` program on the
     core/memetic island driver) → (edgecut, part).
 
@@ -68,17 +74,19 @@ def kaffpaE(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
     from repro.core import evolve as E
     from repro.core.partition import edge_cut
     g = _graph(n, vwgt, xadj, adjcwgt, adjncy)
-    part = E.kaffpaE(g, nparts, imbalance, _MODE_NAMES[mode],
-                     n_islands=n_islands, population=population,
-                     time_limit=time_limit, seed=seed, mesh=mesh,
-                     generations=generations)
+    with obs.use(report):
+        part = E.kaffpaE(g, nparts, imbalance, _MODE_NAMES[mode],
+                         n_islands=n_islands, population=population,
+                         time_limit=time_limit, seed=seed, mesh=mesh,
+                         generations=generations)
     return edge_cut(g, part), part
 
 
 def kahypar(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
             imbalance: float, suppress_output: bool = True, seed: int = 0,
             mode: int = ECO, objective: str = "km1",
-            vcycles: Optional[int] = None, time_limit: float = 0.0):
+            vcycles: Optional[int] = None, time_limit: float = 0.0,
+            report=None):
     """Hypergraph partitioner call (KaHyPar-style C API) → (objval, part).
 
     ``eptr``/``eind`` are the hMETIS CSR arrays (m+1 offsets, pin ids);
@@ -95,7 +103,7 @@ def kahypar(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
     preset = _MODE_NAMES[mode].replace("social", "")   # no social split here
     part = H.kahypar(hg, nparts, imbalance, preset, seed=seed,
                      objective=objective, vcycles=vcycles,
-                     time_limit=time_limit)
+                     time_limit=time_limit, report=report)
     score = H.connectivity if objective == "km1" else H.cut_net
     return score(hg, part), part
 
@@ -104,7 +112,8 @@ def kahyparE(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
              imbalance: float, time_limit: float = 10.0,
              suppress_output: bool = True, seed: int = 0, mode: int = ECO,
              objective: str = "km1", n_islands: int = 2,
-             population: int = 2, generations=None, mesh=None):
+             population: int = 2, generations=None, mesh=None,
+             report=None):
     """Memetic hypergraph partitioner call (the ``kahyparE`` program,
     DESIGN.md §10) → (objval, part).
 
@@ -124,7 +133,7 @@ def kahyparE(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
     part = H.kahyparE(hg, nparts, imbalance, preset, seed=seed,
                       objective=objective, n_islands=n_islands,
                       population=population, time_limit=time_limit,
-                      generations=generations, mesh=mesh)
+                      generations=generations, mesh=mesh, report=report)
     score = H.connectivity if objective == "km1" else H.cut_net
     return score(hg, part), part
 
@@ -132,7 +141,7 @@ def kahyparE(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
 def parhyp(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
            imbalance: float, suppress_output: bool = True, seed: int = 0,
            preconfiguration: str = "fast", objective: str = "km1",
-           mesh=None):
+           mesh=None, report=None):
     """Distributed hypergraph partitioner call (the shard_map ``parhyp``
     program, DESIGN.md §9) → (objval, part).
 
@@ -148,7 +157,7 @@ def parhyp(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
         None if vwgt is None else np.asarray(vwgt))
     part = H.parhyp(hg, nparts, imbalance,
                     preconfiguration=preconfiguration, seed=seed,
-                    mesh=mesh, objective=objective)
+                    mesh=mesh, objective=objective, report=report)
     score = H.connectivity if objective == "km1" else H.cut_net
     return score(hg, part), part
 
@@ -157,7 +166,7 @@ def node_separator(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
                    imbalance: float, suppress_output: bool = True,
                    seed: int = 0, mode: int = ECO, multilevel: bool = True,
                    memetic: bool = False, time_limit: float = 5.0,
-                   n_islands: int = 2, population: int = 2):
+                   n_islands: int = 2, population: int = 2, report=None):
     """→ (num_separator_vertices, separator ids).
 
     nparts == 2 (the recommended §5.2 setting) runs the multilevel
@@ -173,22 +182,24 @@ def node_separator(n: int, vwgt, xadj, adjcwgt, adjncy, nparts: int,
     g = _graph(n, vwgt, xadj, adjcwgt, adjncy)
     if nparts == 2 and memetic:
         from repro.core.nodesep import memetic_node_separator
-        sep, _ = memetic_node_separator(g, imbalance, _MODE_NAMES[mode],
-                                        seed=seed, n_islands=n_islands,
-                                        population=population,
-                                        time_limit=time_limit)
+        with obs.use(report):
+            sep, _ = memetic_node_separator(g, imbalance, _MODE_NAMES[mode],
+                                            seed=seed, n_islands=n_islands,
+                                            population=population,
+                                            time_limit=time_limit)
         return len(sep), sep
     if nparts == 2 and multilevel:
         from repro.core.nodesep import multilevel_node_separator
         sep, _ = multilevel_node_separator(g, imbalance, _MODE_NAMES[mode],
-                                           seed=seed)
+                                           seed=seed, report=report)
         return len(sep), sep
-    part = K.kaffpa(g, nparts, imbalance, _MODE_NAMES[mode], seed=seed)
-    if nparts == 2:
-        sep, _ = S.node_separator(g, imbalance, _MODE_NAMES[mode], seed,
-                                  part=part)
-    else:
-        sep = S.partition_to_vertex_separator(g, part, nparts)
+    with obs.use(report):
+        part = K.kaffpa(g, nparts, imbalance, _MODE_NAMES[mode], seed=seed)
+        if nparts == 2:
+            sep, _ = S.node_separator(g, imbalance, _MODE_NAMES[mode], seed,
+                                      part=part)
+        else:
+            sep = S.partition_to_vertex_separator(g, part, nparts)
     return len(sep), sep
 
 

@@ -65,11 +65,15 @@ PRESETS = {
 
 
 class GraphMedium(ML.ViewCache):
-    """The graph adapter for the shared multilevel engine."""
+    """The graph adapter for the shared multilevel engine.
 
-    def __init__(self, g: Graph, cfg: KaffpaConfig):
+    ``recorder`` (an ``obs.Recorder``) opts this medium's engine runs into
+    observability; it rides ``EngineParams`` and survives contraction."""
+
+    def __init__(self, g: Graph, cfg: KaffpaConfig, recorder=None):
         self.g = g
         self.cfg = cfg
+        self.recorder = recorder
         self.use_kernel = (R.default_use_kernel() if cfg.use_kernel is None
                            else cfg.use_kernel)
 
@@ -85,7 +89,7 @@ class GraphMedium(ML.ViewCache):
             initial_tries=cfg.initial_tries, vcycles=cfg.vcycles,
             contraction_stop_factor=cfg.contraction_stop_factor,
             cluster_weight_factor=cfg.cluster_weight_factor,
-            stop_n_floor=64)
+            stop_n_floor=64, recorder=self.recorder)
 
     def total_vwgt(self) -> int:
         return self.g.total_vwgt()
@@ -107,7 +111,7 @@ class GraphMedium(ML.ViewCache):
 
     def contract(self, clusters: np.ndarray):
         coarse, cl = C.contract(self.g, clusters)
-        return GraphMedium(coarse, self.cfg), cl
+        return GraphMedium(coarse, self.cfg, recorder=self.recorder), cl
 
     # -- device views ------------------------------------------------------
     def build_views(self):
@@ -122,11 +126,18 @@ class GraphMedium(ML.ViewCache):
         coo, ell = self.views
         if force_balance is None:
             force_balance = not is_feasible(g, part, k, eps)
-        part = R.refine_kway(g, part, k, eps, rounds=cfg.refine_rounds,
-                             seed=seed, coo=coo, ell=ell,
-                             use_kernel=self.use_kernel,
-                             force_balance=force_balance)
-        return self.polish(part, k, eps, seed)
+        out = R.refine_kway(g, part, k, eps, rounds=cfg.refine_rounds,
+                            seed=seed, coo=coo, ell=ell,
+                            use_kernel=self.use_kernel,
+                            force_balance=force_balance)
+        rec = ML.recorder_of(self)
+        if rec.enabled:
+            rec.count("refine/rounds", cfg.refine_rounds)
+            rec.count("refine/moves",
+                      int(np.sum(out != np.asarray(part, dtype=np.int64))))
+            if force_balance:
+                rec.count("refine/forced_balance")
+        return self.polish(out, k, eps, seed)
 
     def refine_batch(self, parts: Sequence[np.ndarray], k: int, eps: float,
                      seed: int) -> List[np.ndarray]:
@@ -191,14 +202,17 @@ def kaffpa(g: Graph, k: int, eps: float = 0.03, preset: str = "eco",
            seed: int = 0, time_limit: float = 0.0,
            input_partition: Optional[np.ndarray] = None,
            enforce_balance: bool = False,
-           balance_edges: bool = False) -> np.ndarray:
-    """The ``kaffpa`` program (paper §4.1)."""
+           balance_edges: bool = False, report=None) -> np.ndarray:
+    """The ``kaffpa`` program (paper §4.1).
+
+    ``report`` is an optional ``obs.Recorder`` capturing spans, counters
+    and the per-cycle quality trajectory of this run (DESIGN.md §11)."""
     if balance_edges:
         g = g.with_edge_balanced_weights()
     cfg = PRESETS[preset]
     if k <= 1:
         return np.zeros(g.n, dtype=np.int64)
-    medium = GraphMedium(g, cfg)
+    medium = GraphMedium(g, cfg, recorder=report)
     best = ML.run(medium, k, eps, seed, time_limit=time_limit,
                   input_partition=input_partition)
     if enforce_balance and not is_feasible(g, best, k, eps):

@@ -102,9 +102,11 @@ def _replace_key(cfg: MemeticConfig) -> Callable:
 def _island_step(medium: ML.Medium, k: int, eps: float, cfg: MemeticConfig,
                  pop: List[Individual], rng: np.random.Generator,
                  iseed: int, gen: int, make: Callable,
-                 polish_fn: Optional[Callable], rkey: Callable) -> None:
+                 polish_fn: Optional[Callable], rkey: Callable,
+                 rec=None) -> None:
     """One generation on one island: select, combine/mutate, polish,
     replace.  All randomness comes from the island's own stream."""
+    rec = rec if rec is not None else ML.recorder_of(medium)
     if rng.random() < cfg.combine_prob and len(pop) >= 2:
         ia, ib = (int(x) for x in rng.choice(len(pop), size=2, replace=False))
         pa = pop[ia] if pop[ia].key() <= pop[ib].key() else pop[ib]
@@ -112,16 +114,19 @@ def _island_step(medium: ML.Medium, k: int, eps: float, cfg: MemeticConfig,
         pb = min(others, key=Individual.key) if others else pa
         stamp = iseed + STRIDE_COMBINE * gen
         child = ML.combine(medium, pa.part, pb.part, k, eps, stamp)
+        rec.count("memetic/combines")
     else:
         src = pop[int(rng.integers(len(pop)))]
         stamp = iseed + STRIDE_MUTATE * gen
         child = ML.vcycle(medium, src.part, k, eps, stamp)
+        rec.count("memetic/mutations")
     if polish_fn is not None:
         child = polish_fn(child, stamp)
     ind = make(child, stamp)
     w = max(range(len(pop)), key=lambda j: rkey(pop[j]))
     if rkey(ind) <= rkey(pop[w]):
         pop[w] = ind
+        rec.count("memetic/replacements")
 
 
 def _migration_round(state: IslandState, drv_rng: np.random.Generator,
@@ -184,14 +189,16 @@ def evolve_islands(medium: ML.Medium, k: int, eps: float,
 
     rkey = _replace_key(cfg)
     drv_rng = np.random.default_rng(seed)
+    rec = ML.recorder_of(medium)
 
     pop0 = max(1, cfg.population // 2) if cfg.quickstart else cfg.population
     state = IslandState(islands=[])
     rngs: List[np.random.Generator] = []
     for isl in range(cfg.n_islands):
         iseed = island_seed(seed, isl)
-        parts = ML.population(medium, k, eps, iseed, pop0,
-                              stride=STRIDE_MEMBER)
+        with rec.span("island_init", island=isl, size=pop0):
+            parts = ML.population(medium, k, eps, iseed, pop0,
+                                  stride=STRIDE_MEMBER)
         state.islands.append(
             [make(p, iseed + STRIDE_MEMBER * j)
              for j, p in enumerate(parts)])
@@ -217,13 +224,22 @@ def evolve_islands(medium: ML.Medium, k: int, eps: float,
     gen = 0
     while more(gen):
         gen += 1
-        for isl in range(cfg.n_islands):
-            _island_step(medium, k, eps, cfg, state.islands[isl], rngs[isl],
-                         island_seed(seed, isl), gen, make, polish_fn, rkey)
-        if (cfg.migrate and cfg.n_islands > 1
-                and gen % cfg.migration_interval == 0):
-            _migration_round(state, drv_rng, mesh, rkey)
+        with rec.span("generation", gen=gen):
+            for isl in range(cfg.n_islands):
+                with rec.span("island_step", island=isl):
+                    _island_step(medium, k, eps, cfg, state.islands[isl],
+                                 rngs[isl], island_seed(seed, isl), gen,
+                                 make, polish_fn, rkey, rec=rec)
+            if (cfg.migrate and cfg.n_islands > 1
+                    and gen % cfg.migration_interval == 0):
+                with rec.span("migration", gen=gen):
+                    _migration_round(state, drv_rng, mesh, rkey)
+                rec.count("memetic/migrations")
         state.generations = gen
+        if rec.enabled:
+            best = state.best()
+            rec.point("memetic", gen=gen, fitness=best.fitness,
+                      balance=best.balance)
         if on_generation is not None:
             on_generation(gen, state.best().fitness)
     return state

@@ -15,8 +15,18 @@ Device-view ownership: every `Medium` caches its padded device views
 (CooGraph/ELL, pin-COO/ELL-H) the first time refinement needs them, so each
 hierarchy level builds its views exactly once and reuses them across
 refinement rounds, initial-partition tries, V-cycles and restarts.  The
-module-level ``view_build_count()`` instruments this invariant — the
+``engine/view_builds`` counter in the obs registry instruments this
+invariant (``view_build_count()`` is the back-compat alias) — the
 regression test pins view construction to O(levels), not O(levels×rounds).
+
+Observability (DESIGN.md §11): the engine emits hierarchical spans
+(hierarchy build, per-level coarsen, the initial tournament, per-level
+uncoarsen refinement, V-cycles, restarts), counters, and quality
+trajectories through the recorder resolved by `recorder_of` — either the
+medium's ``EngineParams.recorder`` or the ambient ``obs.use`` context.
+With no recorder installed every hook is the no-op `obs.NULL`; extra
+objective evaluations are guarded by ``rec.enabled`` so the disabled path
+never computes, allocates or syncs for telemetry.
 
 Protected coarsening (V-cycles §2.1 / the KaFFPaE combine operator §2.2) is
 implemented once, medium-independently: `cluster` receives the partitions
@@ -35,27 +45,35 @@ from typing import Any, List, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
+from repro import obs
+
 
 # ---------------------------------------------------------------------------
-# view-construction instrumentation
+# observability
 # ---------------------------------------------------------------------------
 
-_view_builds = 0
+def recorder_of(medium) -> Any:
+    """The recorder engine code should emit to for this medium: the one
+    plumbed through ``EngineParams.recorder``, else the ambient ``obs.use``
+    recorder (``obs.NULL`` when observability is disabled)."""
+    rec = medium.params.recorder
+    return rec if rec is not None else obs.current()
 
 
 def view_build_count() -> int:
-    """Total device-view constructions since process start / last reset."""
-    return _view_builds
+    """Total device-view constructions since process start / last reset.
+
+    Back-compat alias over the obs counter registry
+    (``obs.metrics.get("engine/view_builds")``)."""
+    return int(obs.metrics.get("engine/view_builds"))
 
 
 def reset_view_build_count() -> None:
-    global _view_builds
-    _view_builds = 0
+    obs.metrics.reset("engine/view_builds")
 
 
 def _note_view_build() -> None:
-    global _view_builds
-    _view_builds += 1
+    obs.metrics.inc("engine/view_builds")
 
 
 class ViewCache:
@@ -94,6 +112,7 @@ class EngineParams:
     cluster_weight_factor: float = 3.0  # max cluster weight = W/(factor*k)
     stop_n_floor: int = 64              # never coarsen below this many nodes
     stall_factor: float = 0.95          # stop when a level shrinks < 5%
+    recorder: Any = None                # obs.Recorder; None = ambient/NULL
 
 
 @runtime_checkable
@@ -216,30 +235,38 @@ def build_hierarchy(medium: Medium, k: int, seed: int,
     each `Level` so callers can seed the coarsest level from them.
     """
     p = medium.params
+    rec = recorder_of(medium)
     cur_protect = list(protect) if protect else None
     levels = [Level(medium, None, cur_protect)]
     cur = medium
     stop_n = max(p.contraction_stop_factor * k, p.stop_n_floor)
     lvl = 0
-    while cur.n > stop_n:
-        max_cw = max(1.0, cur.total_vwgt() / (p.cluster_weight_factor * k))
-        clusters = cur.cluster(max_cw, seed + 31 * lvl, protect=cur_protect)
-        if cur_protect:
-            clusters = _signature_split(clusters, cur_protect)
-        coarse, cl = cur.contract(clusters)
-        if coarse.n >= cur.n * p.stall_factor:
-            break
-        if cur_protect:
-            # clusters are block-constant → scatter projects exactly
-            pushed = []
-            for part in cur_protect:
-                pc = np.zeros(coarse.n, dtype=np.int64)
-                pc[cl] = part
-                pushed.append(pc)
-            cur_protect = pushed
-        levels.append(Level(coarse, cl, cur_protect))
-        cur = coarse
-        lvl += 1
+    with rec.span("hierarchy", n=medium.n, k=k,
+                  protected=len(cur_protect or ())):
+        while cur.n > stop_n:
+            with rec.span("coarsen", level=lvl, n=cur.n):
+                max_cw = max(1.0,
+                             cur.total_vwgt() / (p.cluster_weight_factor * k))
+                clusters = cur.cluster(max_cw, seed + 31 * lvl,
+                                       protect=cur_protect)
+                if cur_protect:
+                    clusters = _signature_split(clusters, cur_protect)
+                coarse, cl = cur.contract(clusters)
+            if coarse.n >= cur.n * p.stall_factor:
+                break
+            if cur_protect:
+                # clusters are block-constant → scatter projects exactly
+                pushed = []
+                for part in cur_protect:
+                    pc = np.zeros(coarse.n, dtype=np.int64)
+                    pc[cl] = part
+                    pushed.append(pc)
+                cur_protect = pushed
+            levels.append(Level(coarse, cl, cur_protect))
+            cur = coarse
+            lvl += 1
+    rec.count("engine/hierarchies")
+    rec.count("engine/levels", len(levels))
     return levels
 
 
@@ -256,21 +283,29 @@ def initial_partition(level: Level, k: int, eps: float, seed: int
     single-candidate polish (multi-try / flow on graphs).
     """
     medium = level.medium
-    cands = medium.initial_candidates(k, eps, seed)
-    refined = medium.refine_batch(cands, k, eps, seed)
-    best, best_obj = None, np.inf
-    best_any, best_any_obj = None, np.inf
-    for part in refined:
-        obj = medium.objective(part)
-        if obj < best_any_obj:
-            best_any, best_any_obj = part, obj
-        if obj < best_obj and medium.is_feasible(part, k, eps):
-            best, best_obj = part, obj
-    # no feasible candidate: seed from the best objective anyway — the
-    # uncoarsening refiners force balance back (tight-eps media hit this)
-    if best is None:
-        best = best_any
-    return medium.polish(best, k, eps, seed)
+    rec = recorder_of(medium)
+    with rec.span("initial_tournament", n=medium.n, k=k):
+        cands = medium.initial_candidates(k, eps, seed)
+        refined = medium.refine_batch(cands, k, eps, seed)
+        rec.count("engine/initial_tries", len(cands))
+        best, best_obj = None, np.inf
+        best_any, best_any_obj = None, np.inf
+        for part in refined:
+            obj = medium.objective(part)
+            if obj < best_any_obj:
+                best_any, best_any_obj = part, obj
+            if obj < best_obj and medium.is_feasible(part, k, eps):
+                best, best_obj = part, obj
+        # no feasible candidate: seed from the best objective anyway — the
+        # uncoarsening refiners force balance back (tight-eps media hit this)
+        if best is None:
+            best = best_any
+            rec.count("engine/tournament_infeasible")
+        if rec.enabled:
+            rec.point("initial", n=medium.n,
+                      objective=min(best_obj, best_any_obj),
+                      feasible=best_obj < np.inf)
+        return medium.polish(best, k, eps, seed)
 
 
 # ---------------------------------------------------------------------------
@@ -279,18 +314,26 @@ def initial_partition(level: Level, k: int, eps: float, seed: int
 
 def uncoarsen(levels: List[Level], part_coarse: np.ndarray, k: int,
               eps: float, seed: int) -> np.ndarray:
+    rec = recorder_of(levels[0].medium)
     part = np.asarray(part_coarse, dtype=np.int64)
-    for li in range(len(levels) - 1, 0, -1):
-        part = part[levels[li].cl]               # project to the finer level
-        part = levels[li - 1].medium.refine(part, k, eps, seed + li)
+    with rec.span("uncoarsen", levels=len(levels)):
+        for li in range(len(levels) - 1, 0, -1):
+            part = part[levels[li].cl]           # project to the finer level
+            fine = levels[li - 1].medium
+            with rec.span("refine", level=li - 1, n=fine.n):
+                part = fine.refine(part, k, eps, seed + li)
+            if rec.enabled:
+                rec.point("uncoarsen", level=li - 1, n=fine.n,
+                          objective=fine.objective(part))
     return part
 
 
 def multilevel(medium: Medium, k: int, eps: float, seed: int) -> np.ndarray:
     """One full multilevel cycle: coarsen, tournament, uncoarsen-refine."""
-    levels = build_hierarchy(medium, k, seed)
-    part_c = initial_partition(levels[-1], k, eps, seed)
-    return uncoarsen(levels, part_c, k, eps, seed)
+    with recorder_of(medium).span("multilevel", n=medium.n, k=k):
+        levels = build_hierarchy(medium, k, seed)
+        part_c = initial_partition(levels[-1], k, eps, seed)
+        return uncoarsen(levels, part_c, k, eps, seed)
 
 
 def population(medium: Medium, k: int, eps: float, seed: int, size: int,
@@ -307,12 +350,13 @@ def population(medium: Medium, k: int, eps: float, seed: int, size: int,
     structurally never worse than a single run at any preset."""
     ncyc = medium.params.vcycles
     out = []
-    for j in range(size):
-        s = seed + stride * j
-        part = multilevel(medium, k, eps, s)
-        for cyc in range(1, ncyc):
-            part = vcycle(medium, part, k, eps, s + 7919 * cyc)
-        out.append(part)
+    with recorder_of(medium).span("population", size=size):
+        for j in range(size):
+            s = seed + stride * j
+            part = multilevel(medium, k, eps, s)
+            for cyc in range(1, ncyc):
+                part = vcycle(medium, part, k, eps, s + 7919 * cyc)
+            out.append(part)
     return out
 
 
@@ -326,16 +370,24 @@ def vcycle(medium: Medium, part: np.ndarray, k: int, eps: float,
     cut, seed the coarsest level with it, refine on the way up.  The result
     is accepted only if it does not worsen the objective (feasibly), so
     quality is non-decreasing across cycles (paper §2.1, Walshaw)."""
+    rec = recorder_of(medium)
     part = np.asarray(part, dtype=np.int64)
-    levels = build_hierarchy(medium, k, seed, protect=[part])
-    coarsest = levels[-1]
-    part_c = coarsest.protect[0] if coarsest.protect is not None else part
-    part_c = coarsest.medium.refine(part_c, k, eps, seed)
-    out = uncoarsen(levels, part_c, k, eps, seed)
-    if (medium.objective(out) <= medium.objective(part)
-            and medium.is_feasible(out, k, eps)):
-        return out
-    return part
+    with rec.span("vcycle", n=medium.n, k=k):
+        levels = build_hierarchy(medium, k, seed, protect=[part])
+        coarsest = levels[-1]
+        part_c = coarsest.protect[0] if coarsest.protect is not None else part
+        part_c = coarsest.medium.refine(part_c, k, eps, seed)
+        out = uncoarsen(levels, part_c, k, eps, seed)
+        obj_out, obj_in = medium.objective(out), medium.objective(part)
+        accepted = obj_out <= obj_in and medium.is_feasible(out, k, eps)
+        rec.count("engine/vcycles")
+        if rec.enabled:
+            rec.point("vcycle", before=obj_in, after=obj_out,
+                      accepted=accepted)
+        if accepted:
+            return out
+        rec.count("engine/vcycles_rejected")
+        return part
 
 
 def combine(medium: Medium, pa: np.ndarray, pb: np.ndarray, k: int,
@@ -347,15 +399,18 @@ def combine(medium: Medium, pa: np.ndarray, pb: np.ndarray, k: int,
     re-coarsening, the better valid parent seeds the coarsest level, and
     refinement (which never worsens) assembles good parts of both.
     """
+    rec = recorder_of(medium)
     pa = np.asarray(pa, dtype=np.int64)
     pb = np.asarray(pb, dtype=np.int64)
-    if pb.max() < k and medium.objective(pb) < medium.objective(pa):
-        pa, pb = pb, pa              # seed from the better valid parent
-    levels = build_hierarchy(medium, k, seed, protect=[pa, pb])
-    coarsest = levels[-1]
-    part_c = coarsest.protect[0] if coarsest.protect is not None else pa
-    part_c = coarsest.medium.refine(part_c, k, eps, seed)
-    return uncoarsen(levels, part_c, k, eps, seed)
+    with rec.span("combine", n=medium.n, k=k):
+        if pb.max() < k and medium.objective(pb) < medium.objective(pa):
+            pa, pb = pb, pa          # seed from the better valid parent
+        levels = build_hierarchy(medium, k, seed, protect=[pa, pb])
+        coarsest = levels[-1]
+        part_c = coarsest.protect[0] if coarsest.protect is not None else pa
+        part_c = coarsest.medium.refine(part_c, k, eps, seed)
+        rec.count("engine/combines")
+        return uncoarsen(levels, part_c, k, eps, seed)
 
 
 # ---------------------------------------------------------------------------
@@ -370,20 +425,34 @@ def run(medium: Medium, k: int, eps: float, seed: int,
     budget (paper ``--time_limit``), keeping the best feasible result."""
     if k <= 1:
         return np.zeros(medium.n, dtype=np.int64)
+    rec = recorder_of(medium)
     t0 = time.monotonic()
-    if input_partition is not None:
-        best = np.asarray(input_partition, dtype=np.int64)
-        best = medium.refine(best, k, eps, seed)
-    else:
-        best = multilevel(medium, k, eps, seed)
-    ncyc = medium.params.vcycles if vcycles is None else vcycles
-    for cyc in range(1, ncyc):
-        best = vcycle(medium, best, k, eps, seed + 7919 * cyc)
-    trial = 1
-    while time_limit > 0 and time.monotonic() - t0 < time_limit:
-        cand = multilevel(medium, k, eps, seed + 104729 * trial)
-        if (medium.objective(cand) < medium.objective(best)
-                and medium.is_feasible(cand, k, eps)):
-            best = cand
-        trial += 1
+    with rec.span("run", n=medium.n, k=k, eps=eps):
+        if input_partition is not None:
+            best = np.asarray(input_partition, dtype=np.int64)
+            best = medium.refine(best, k, eps, seed)
+        else:
+            best = multilevel(medium, k, eps, seed)
+        if rec.enabled:
+            rec.point("cycles", cycle=0, objective=medium.objective(best),
+                      imbalance=medium.imbalance(best, k))
+        ncyc = medium.params.vcycles if vcycles is None else vcycles
+        for cyc in range(1, ncyc):
+            best = vcycle(medium, best, k, eps, seed + 7919 * cyc)
+            if rec.enabled:
+                rec.point("cycles", cycle=cyc,
+                          objective=medium.objective(best),
+                          imbalance=medium.imbalance(best, k))
+        trial = 1
+        while time_limit > 0 and time.monotonic() - t0 < time_limit:
+            with rec.span("restart", trial=trial):
+                cand = multilevel(medium, k, eps, seed + 104729 * trial)
+            rec.count("engine/restarts")
+            if (medium.objective(cand) < medium.objective(best)
+                    and medium.is_feasible(cand, k, eps)):
+                best = cand
+            if rec.enabled:
+                rec.point("restarts", trial=trial,
+                          objective=medium.objective(best))
+            trial += 1
     return best

@@ -79,9 +79,10 @@ class SeparatorMedium(ML.ViewCache):
     Partitions handled by the engine are 3-label arrays {0=A, 1=B, 2=S};
     ``k`` is always 2 (two blocks — S is the objective, not a block)."""
 
-    def __init__(self, g: Graph, cfg: NodesepConfig):
+    def __init__(self, g: Graph, cfg: NodesepConfig, recorder=None):
         self.g = g
         self.cfg = cfg
+        self.recorder = recorder
         self.use_kernel = (R.default_use_kernel() if cfg.use_kernel is None
                            else cfg.use_kernel)
 
@@ -97,7 +98,7 @@ class SeparatorMedium(ML.ViewCache):
             initial_tries=cfg.initial_tries, vcycles=cfg.vcycles,
             contraction_stop_factor=cfg.contraction_stop_factor,
             cluster_weight_factor=cfg.cluster_weight_factor,
-            stop_n_floor=cfg.stop_n_floor)
+            stop_n_floor=cfg.stop_n_floor, recorder=self.recorder)
 
     def total_vwgt(self) -> int:
         return self.g.total_vwgt()
@@ -120,7 +121,7 @@ class SeparatorMedium(ML.ViewCache):
 
     def contract(self, clusters: np.ndarray):
         coarse, cl = C.contract(self.g, clusters)
-        return SeparatorMedium(coarse, self.cfg), cl
+        return SeparatorMedium(coarse, self.cfg, recorder=self.recorder), cl
 
     # -- device views ------------------------------------------------------
     def build_views(self):
@@ -132,17 +133,23 @@ class SeparatorMedium(ML.ViewCache):
     def refine(self, part: np.ndarray, k: int, eps: float, seed: int,
                force_balance: Optional[bool] = None) -> np.ndarray:
         coo, ell = self.views
+        rec = ML.recorder_of(self)
         if force_balance is None:
             force_balance = not separator_is_feasible(self.g, part, eps)
         part = refine_separator(self.g, part, eps,
                                 rounds=self.cfg.refine_rounds, seed=seed,
                                 coo=coo, ell=ell, use_kernel=self.use_kernel,
                                 force_balance=force_balance)
+        if rec.enabled:
+            rec.count("refine/rounds", self.cfg.refine_rounds)
+            if force_balance:
+                rec.count("refine/forced_balance")
         part = self.polish(part, k, eps, seed)
         cand = self._cut_candidate(part, eps, seed)
         if (separator_weight(self.g, cand) < separator_weight(self.g, part)
                 and separator_is_feasible(self.g, cand, eps)):
             part = cand
+            rec.count("nodesep/cut_escapes_adopted")
         return part
 
     def _cut_candidate(self, part: np.ndarray, eps: float,
@@ -189,11 +196,14 @@ class SeparatorMedium(ML.ViewCache):
 
     def polish(self, part: np.ndarray, k: int, eps: float,
                seed: int) -> np.ndarray:
+        rec = ML.recorder_of(self)
         if self.g.n <= self.cfg.vc_polish_max_n:
             part = vertex_cover_polish(self.g, part, eps)
+            rec.count("nodesep/vc_polish")
         if self.cfg.use_flow and self.g.n <= self.cfg.flow_max_n:
             part = flow_separator_polish(self.g, part, eps,
                                          band_depth=self.cfg.flow_band_depth)
+            rec.count("nodesep/flow_polish")
         return part
 
     # -- initial partitioning ----------------------------------------------
@@ -246,7 +256,7 @@ def split_labels(labels: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
 def multilevel_node_separator(g: Graph, eps: float = 0.20,
                               preset: str = "eco", seed: int = 0,
                               vcycles: Optional[int] = None,
-                              time_limit: float = 0.0
+                              time_limit: float = 0.0, report=None
                               ) -> Tuple[np.ndarray, np.ndarray]:
     """The multilevel ``node_separator`` program (2-way).
 
@@ -256,16 +266,19 @@ def multilevel_node_separator(g: Graph, eps: float = 0.20,
     """
     return split_labels(nodesep_labels(g, eps, preset, seed,
                                        vcycles=vcycles,
-                                       time_limit=time_limit))
+                                       time_limit=time_limit,
+                                       report=report))
 
 
 def nodesep_labels(g: Graph, eps: float = 0.20, preset: str = "eco",
                    seed: int = 0, vcycles: Optional[int] = None,
-                   time_limit: float = 0.0) -> np.ndarray:
-    """Raw 3-label output of the multilevel separator driver."""
+                   time_limit: float = 0.0, report=None) -> np.ndarray:
+    """Raw 3-label output of the multilevel separator driver.
+
+    ``report`` is an optional ``obs.Recorder`` (DESIGN.md §11)."""
     if g.n == 0:
         return np.zeros(0, dtype=np.int64)
-    medium = SeparatorMedium(g, PRESETS[preset])
+    medium = SeparatorMedium(g, PRESETS[preset], recorder=report)
     return ML.run(medium, 2, eps, seed, vcycles=vcycles,
                   time_limit=time_limit)
 

@@ -28,6 +28,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 
+from repro import obs
 from repro.core.csr import Graph, _pow2_pad
 from repro.core import coarsen as C
 from repro.core import kaffpa as K
@@ -157,21 +158,27 @@ def parhip_refine(g: Graph, part: np.ndarray, k: int, eps: float,
     the better of in/out)."""
     n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names
                             if a == axis]))
+    rec = obs.current()
     sg = shard_graph(g, n_shards)
     labels0 = np.zeros(sg.n_pad, dtype=np.int32)
     labels0[:g.n] = part
     total = g.total_vwgt()
     cap = jnp.full((k,), (1.0 + eps) * np.ceil(total / k), jnp.float32)
     # vwgt reshaped flat for rows owned by shards; padding rows weight 0
-    out = _parhip_refine_jit(mesh, jnp.asarray(sg.src), jnp.asarray(sg.dst),
-                             jnp.asarray(sg.w), jnp.asarray(sg.vwgt),
-                             jnp.asarray(labels0), cap,
-                             jax.random.PRNGKey(seed), sg.rows, k, rounds,
-                             n_shards, axis)
-    cand = np.asarray(out)[:g.n].astype(np.int64)
+    with rec.span("parhip_refine", n=g.n, rounds=rounds, shards=n_shards):
+        out = _parhip_refine_jit(mesh, jnp.asarray(sg.src),
+                                 jnp.asarray(sg.dst),
+                                 jnp.asarray(sg.w), jnp.asarray(sg.vwgt),
+                                 jnp.asarray(labels0), cap,
+                                 jax.random.PRNGKey(seed), sg.rows, k,
+                                 rounds, n_shards, axis)
+        cand = np.asarray(out)[:g.n].astype(np.int64)
+    rec.count("parhip/dist_rounds", rounds)
+    rec.count("parhip/psum_rounds", rounds)   # one sizes-histogram psum/round
     if (edge_cut(g, cand) <= edge_cut(g, part)
             and is_feasible(g, cand, k, eps)):
         return cand
+    rec.count("parhip/rounds_rejected")
     return part
 
 
@@ -188,12 +195,13 @@ PARHIP_PRESETS = {
 def parhip(g: Graph, k: int, eps: float = 0.03,
            preconfiguration: str = "fastmesh", seed: int = 0,
            mesh: Optional[Mesh] = None,
-           vertex_degree_weights: bool = False) -> np.ndarray:
+           vertex_degree_weights: bool = False, report=None) -> np.ndarray:
     """The ``parhip`` program (§4.3.1).
 
     Host-orchestrated multilevel with the distributed LP round as the
     refinement engine at every level; the coarsest graph is partitioned by
-    the (evolutionary-grade) sequential path, as in the paper.
+    the (evolutionary-grade) sequential path, as in the paper.  ``report``
+    is an optional ``obs.Recorder`` (DESIGN.md §11).
     """
     if vertex_degree_weights:
         g = Graph(g.xadj, g.adjncy, 1 + g.degrees(), g.adjwgt)
@@ -202,24 +210,40 @@ def parhip(g: Graph, k: int, eps: float = 0.03,
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), ("nodes",))
     from repro.core import multilevel as ML
-    levels = ML.build_hierarchy(K.GraphMedium(g, cfg), k, seed)
-    part = ML.initial_partition(levels[-1], k, eps, seed)
+    with obs.use(report):
+        rec = obs.current()
+        with rec.span("parhip", n=g.n, k=k,
+                      preconfiguration=preconfiguration):
+            levels = ML.build_hierarchy(K.GraphMedium(g, cfg), k, seed)
+            part = ML.initial_partition(levels[-1], k, eps, seed)
 
-    def refine_level(g_fine: Graph, part: np.ndarray, li: int) -> np.ndarray:
-        part = parhip_refine(g_fine, part, k, eps, mesh,
-                             rounds=pc["rounds"], seed=seed + li)
-        if not is_feasible(g_fine, part, k, eps):
-            from repro.core import refine as R
-            part = R.refine_kway(g_fine, part, k, eps, rounds=6,
-                                 seed=seed + li, force_balance=True)
-        return part
+            def refine_level(g_fine: Graph, part: np.ndarray,
+                             li: int) -> np.ndarray:
+                part = parhip_refine(g_fine, part, k, eps, mesh,
+                                     rounds=pc["rounds"], seed=seed + li)
+                if not is_feasible(g_fine, part, k, eps):
+                    from repro.core import refine as R
+                    part = R.refine_kway(g_fine, part, k, eps, rounds=6,
+                                         seed=seed + li, force_balance=True)
+                    rec.count("parhip/repairs")
+                return part
 
-    for li in range(len(levels) - 1, 0, -1):
-        part = C.project(part, levels[li].cl)
-        part = refine_level(levels[li - 1].medium.g, part, li)
-    if len(levels) == 1:
-        # single-level hierarchy (n <= stop_n): the loop above is empty —
-        # still run the distributed refiner and the feasibility repair at
-        # level 0 instead of returning the raw initial partition
-        part = refine_level(g, part, 0)
+            for li in range(len(levels) - 1, 0, -1):
+                part = C.project(part, levels[li].cl)
+                fine = levels[li - 1].medium.g
+                with rec.span("parhip_level", level=li - 1, n=fine.n):
+                    part = refine_level(fine, part, li)
+                if rec.enabled:
+                    rec.point("parhip", level=li - 1,
+                              objective=float(edge_cut(fine, part)))
+            if len(levels) == 1:
+                # single-level hierarchy (n <= stop_n): the loop above is
+                # empty — still run the distributed refiner and the
+                # feasibility repair at level 0 instead of returning the raw
+                # initial partition
+                with rec.span("parhip_level", level=0, n=g.n):
+                    part = refine_level(g, part, 0)
+                if rec.enabled:
+                    rec.point("parhip", level=0,
+                              objective=float(edge_cut(g, part)))
     return part

@@ -1,0 +1,63 @@
+"""repro.obs — zero-dependency observability for the partitioning engine
+(DESIGN.md §11): hierarchical trace spans with a JSONL journal and Chrome
+trace export, a thread-safe counter/gauge registry (including XLA compile
+counts via ``jax.monitoring``), and per-level / per-cycle / per-generation
+quality trajectories.
+
+Everything is opt-in behind a recorder object:
+
+    from repro import obs
+
+    rec = obs.Recorder("kaffpa")
+    with obs.use(rec):
+        part = kaffpa(g, 4, 0.03, "eco", seed=1)
+    print(rec.compile_count, rec.trajectory("cycles"))
+    obs.write_chrome_trace(rec, "trace.json")   # open in ui.perfetto.dev
+
+or through the library interface's ``report=`` kwarg
+(``interface.kaffpa(..., report=rec)``).  With no recorder installed the
+ambient recorder is `NULL`: every hook is a no-op that never allocates,
+traces or syncs the device.
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.obs.recorder import NULL, NullRecorder, Recorder
+from repro.obs.registry import (CounterRegistry, install_jax_compile_listener,
+                                metrics)
+from repro.obs.trace import (chrome_trace, read_jsonl, write_chrome_trace,
+                             write_jsonl)
+
+__all__ = [
+    "NULL", "NullRecorder", "Recorder", "CounterRegistry", "metrics",
+    "install_jax_compile_listener", "chrome_trace", "read_jsonl",
+    "write_chrome_trace", "write_jsonl", "current", "use",
+]
+
+_current = NULL
+
+
+def current():
+    """The ambient recorder (`NULL` unless a ``use`` context is active)."""
+    return _current
+
+
+@contextlib.contextmanager
+def use(recorder):
+    """Install ``recorder`` as the ambient recorder for the duration.
+
+    ``use(None)`` is a passthrough (the current ambient recorder stays
+    active) so entry points can thread an optional ``report=`` kwarg
+    without clobbering an enclosing context.
+    """
+    global _current
+    if recorder is None:
+        yield _current
+        return
+    prev = _current
+    _current = recorder
+    try:
+        yield recorder
+    finally:
+        _current = prev

@@ -1,0 +1,115 @@
+"""The engine-wide counter/gauge registry (DESIGN.md §11).
+
+One thread-safe registry is the single source of truth for every counter
+the engine emits (view builds, LP/FM rounds, moves applied, feasibility
+repairs, psum rounds, jax compiles).  It replaces the thread-unsafe
+module global that ``multilevel.view_build_count()`` used to read: the
+old functions are now thin aliases over ``metrics``.
+
+Compile counting rides ``jax.monitoring``: `install_jax_compile_listener`
+registers one process-wide duration listener that increments
+``jax/compiles`` (and accumulates ``jax/compile_secs``) on every XLA
+backend compile, plus an event listener for compilation-cache hits.  A
+`Recorder` snapshots the registry at construction, so per-run deltas
+(``Recorder.counters()``) give per-cell compile counts without ever
+unregistering the listener (jax offers no per-listener removal).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+
+class CounterRegistry:
+    """Thread-safe monotonically increasing counters plus last-value
+    gauges, keyed by slash-separated names (``"engine/view_builds"``)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, float] = {}
+
+    def inc(self, name: str, value: float = 1) -> float:
+        with self._lock:
+            new = self._counters.get(name, 0) + value
+            self._counters[name] = new
+            return new
+
+    def get(self, name: str, default: float = 0) -> float:
+        with self._lock:
+            return self._counters.get(name, default)
+
+    def set_gauge(self, name: str, value: float) -> None:
+        with self._lock:
+            self._gauges[name] = value
+
+    def gauge(self, name: str, default: Optional[float] = None):
+        with self._lock:
+            return self._gauges.get(name, default)
+
+    def reset(self, name: Optional[str] = None) -> None:
+        """Reset one counter/gauge, or the whole registry with ``None``."""
+        with self._lock:
+            if name is None:
+                self._counters.clear()
+                self._gauges.clear()
+            else:
+                self._counters.pop(name, None)
+                self._gauges.pop(name, None)
+
+    def snapshot(self) -> Dict[str, float]:
+        """Copy of the counter map (the per-run delta anchor)."""
+        with self._lock:
+            return dict(self._counters)
+
+    def gauges(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._gauges)
+
+
+#: The process-wide registry every engine counter lands in.
+metrics = CounterRegistry()
+
+
+# ---------------------------------------------------------------------------
+# jax.monitoring integration: compile counts
+# ---------------------------------------------------------------------------
+
+#: The duration event jax records around every XLA backend compile
+#: (jax._src.dispatch.BACKEND_COMPILE_EVENT).
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+CACHE_HIT_EVENT = "/jax/compilation_cache/cache_hits"
+
+_install_lock = threading.Lock()
+_installed = False
+
+
+def install_jax_compile_listener() -> bool:
+    """Idempotently register the process-wide compile listeners.
+
+    Returns True when the listeners are active (already or newly
+    installed), False when jax is unavailable.  Listener cost off the
+    compile path is zero — jax only invokes it while compiling.
+    """
+    global _installed
+    with _install_lock:
+        if _installed:
+            return True
+        try:
+            from jax import monitoring
+        except ImportError:  # pragma: no cover - jax is a hard dep here
+            return False
+
+        def _on_duration(event: str, duration: float, **kw) -> None:
+            if event == COMPILE_EVENT:
+                metrics.inc("jax/compiles")
+                metrics.inc("jax/compile_secs", duration)
+
+        def _on_event(event: str, **kw) -> None:
+            if event == CACHE_HIT_EVENT:
+                metrics.inc("jax/compile_cache_hits")
+
+        monitoring.register_event_duration_secs_listener(_on_duration)
+        monitoring.register_event_listener(_on_event)
+        _installed = True
+        return True

@@ -1,0 +1,102 @@
+"""Journal / trace export: JSONL round-trip and Chrome trace events.
+
+The JSONL journal is the durable form: one ``{"kind": "recorder", ...}``
+header line per recorder followed by its events (each stamped with the
+recorder name), append-merged across recorders.  ``chrome_trace`` turns
+the same events into the Chrome trace-event JSON that Perfetto
+(https://ui.perfetto.dev) opens directly: spans as matched B/E duration
+events, counters and trajectory values as "C" counter tracks.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Iterable, List, Tuple, Union
+
+from repro.obs.recorder import Recorder
+
+Recorders = Union[Recorder, Iterable[Recorder]]
+
+
+def _as_list(recs: Recorders) -> List[Recorder]:
+    return [recs] if isinstance(recs, Recorder) else list(recs)
+
+
+def write_jsonl(recs: Recorders, path: str) -> int:
+    """Write the event journal(s) as JSON lines; returns lines written."""
+    lines = 0
+    with open(path, "w") as f:
+        for rec in _as_list(recs):
+            hdr = {"kind": "recorder", "name": rec.name,
+                   "counters": rec.counters(),
+                   "trajectories": rec.trajectories}
+            f.write(json.dumps(hdr) + "\n")
+            lines += 1
+            with rec._lock:
+                events = list(rec.events)
+            for ev in events:
+                f.write(json.dumps({"rec": rec.name, **ev}) + "\n")
+                lines += 1
+    return lines
+
+
+def read_jsonl(path: str) -> Tuple[List[Dict[str, Any]],
+                                   List[Dict[str, Any]]]:
+    """Read a journal back → (recorder header dicts, event dicts)."""
+    headers, events = [], []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            obj = json.loads(line)
+            (headers if obj.get("kind") == "recorder" else events).append(obj)
+    return headers, events
+
+
+def chrome_trace(recs: Recorders) -> Dict[str, Any]:
+    """Chrome trace-event JSON (the ``traceEvents`` array format).
+
+    Spans become matched B/E duration events on (pid, tid) tracks,
+    counter increments and trajectory points become "C" counter events —
+    all directly viewable in Perfetto or chrome://tracing.
+    """
+    pid = os.getpid()
+    tes: List[Dict[str, Any]] = []
+    for rec in _as_list(recs):
+        with rec._lock:
+            events = list(rec.events)
+        totals: Dict[str, float] = {}
+        for ev in events:
+            tid = ev.get("tid", 0)
+            if ev["ph"] in ("B", "E"):
+                out = {"name": ev["name"], "ph": ev["ph"], "ts": ev["ts"],
+                       "pid": pid, "tid": tid, "cat": rec.name}
+                if "args" in ev:
+                    out["args"] = ev["args"]
+                tes.append(out)
+            elif ev["ph"] == "C":
+                totals[ev["name"]] = totals.get(ev["name"], 0) + ev["value"]
+                tes.append({"name": ev["name"], "ph": "C", "ts": ev["ts"],
+                            "pid": pid, "tid": 0, "cat": rec.name,
+                            "args": {"value": totals[ev["name"]]}})
+            elif ev["ph"] == "G":
+                tes.append({"name": ev["name"], "ph": "C", "ts": ev["ts"],
+                            "pid": pid, "tid": 0, "cat": rec.name,
+                            "args": {"value": ev["value"]}})
+            elif ev["ph"] == "P":
+                vals = {k: v for k, v in ev["values"].items()
+                        if isinstance(v, (int, float))}
+                if vals:
+                    tes.append({"name": ev["name"], "ph": "C",
+                                "ts": ev["ts"], "pid": pid, "tid": 0,
+                                "cat": rec.name, "args": vals})
+    return {"traceEvents": tes, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(recs: Recorders, path: str) -> int:
+    """Write the Chrome trace JSON; returns the number of trace events."""
+    trace = chrome_trace(recs)
+    with open(path, "w") as f:
+        json.dump(trace, f)
+    return len(trace["traceEvents"])

@@ -1,0 +1,203 @@
+"""repro.obs (DESIGN.md §11): span nesting + JSONL round-trip, Chrome
+trace export, counter registry (incl. the view_build_count aliases and
+jax compile counts), the zero-cost disabled path, and the engine's quality
+trajectories."""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import multilevel as ML
+from repro.core.kaffpa import GraphMedium, PRESETS, kaffpa
+from repro.core.partition import edge_cut
+from repro.io.generators import grid2d
+
+GRID16 = grid2d(16, 16)
+GRID24 = grid2d(24, 24)
+
+
+# -- spans + journal ----------------------------------------------------------
+
+def test_span_nesting_and_jsonl_roundtrip(tmp_path):
+    rec = obs.Recorder("t", compile_counters=False)
+    with rec.span("outer", level=0):
+        assert rec.span_path() == "outer"
+        with rec.span("inner", level=1):
+            assert rec.span_path() == "outer/inner"
+            rec.count("t/hits", 2)
+        rec.point("quality", cycle=0, objective=10.0)
+    assert rec.span_path() == ""
+    b = [e for e in rec.events if e["ph"] == "B"]
+    e = [e for e in rec.events if e["ph"] == "E"]
+    assert [ev["name"] for ev in b] == ["outer", "inner"]
+    assert [ev["name"] for ev in e] == ["inner", "outer"]
+    assert [ev["depth"] for ev in b] == [0, 1]
+    # timestamps are wall-anchored microseconds, monotone within a thread
+    ts = [ev["ts"] for ev in rec.events]
+    assert ts == sorted(ts)
+    assert abs(ts[0] / 1e6 - time.time()) < 60
+
+    path = tmp_path / "journal.jsonl"
+    n = obs.write_jsonl(rec, str(path))
+    assert n == 1 + len(rec.events)
+    headers, events = obs.read_jsonl(str(path))
+    assert len(headers) == 1 and headers[0]["name"] == "t"
+    assert headers[0]["counters"]["t/hits"] == 2
+    assert headers[0]["trajectories"]["quality"] == [
+        {"cycle": 0, "objective": 10.0}]
+    assert [ev["ph"] for ev in events] == [ev["ph"] for ev in rec.events]
+
+
+def test_span_exception_still_closes(tmp_path):
+    rec = obs.Recorder("t", compile_counters=False)
+    with pytest.raises(RuntimeError):
+        with rec.span("boom"):
+            raise RuntimeError("x")
+    assert rec.span_path() == ""
+    phs = [e["ph"] for e in rec.events]
+    assert phs == ["B", "E"]
+
+
+def test_chrome_trace_valid_and_balanced(tmp_path):
+    rec = obs.Recorder("cell", compile_counters=False)
+    with rec.span("a"):
+        with rec.span("b", n=7):
+            rec.count("k/rounds", 3)
+        rec.point("quality", objective=5.0, note="text-dropped")
+        rec.gauge("k/depth", 2)
+    path = tmp_path / "trace.json"
+    obs.write_chrome_trace(rec, str(path))
+    doc = json.loads(path.read_text())          # valid JSON by construction
+    tes = doc["traceEvents"]
+    assert isinstance(tes, list) and tes
+    b = [t for t in tes if t["ph"] == "B"]
+    e = [t for t in tes if t["ph"] == "E"]
+    assert len(b) == len(e) == 2
+    for t in tes:
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(t)
+    # counter events carry cumulated values / numeric trajectory fields
+    c = {t["name"]: t["args"] for t in tes if t["ph"] == "C"}
+    assert c["k/rounds"] == {"value": 3}
+    assert c["quality"] == {"objective": 5.0}   # non-numeric fields dropped
+    assert c["k/depth"] == {"value": 2}
+
+
+# -- counter registry ---------------------------------------------------------
+
+def test_registry_thread_safe_increments():
+    reg = obs.CounterRegistry()
+
+    def work():
+        for _ in range(1000):
+            reg.inc("x")
+
+    threads = [threading.Thread(target=work) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert reg.get("x") == 8000
+
+
+def test_view_build_count_rides_registry():
+    before_alias = ML.view_build_count()
+    before_reg = obs.metrics.get("engine/view_builds")
+    assert before_alias == int(before_reg)
+    medium = GraphMedium(GRID16, PRESETS["fast"])
+    medium.views                      # first access builds the device views
+    assert ML.view_build_count() == before_alias + 1
+    assert obs.metrics.get("engine/view_builds") == before_reg + 1
+
+
+def test_compile_count_on_fresh_shape():
+    import jax
+    import jax.numpy as jnp
+    rec = obs.Recorder("compile")
+
+    @jax.jit
+    def f(x):
+        return x * 3 + 1
+
+    f(jnp.ones((13, 5))).block_until_ready()    # shape unseen by the cache
+    assert rec.compile_count >= 1
+    assert rec.counters().get("jax/compile_secs", 0) > 0
+
+
+# -- disabled path ------------------------------------------------------------
+
+def test_null_recorder_is_free():
+    assert obs.current() is obs.NULL
+    assert obs.NULL.enabled is False
+    s1 = obs.NULL.span("a", big=list(range(10)))
+    s2 = obs.NULL.span("b")
+    assert s1 is s2                   # one shared span object, no allocation
+    with s1:
+        obs.NULL.count("x")
+        obs.NULL.point("q", objective=1.0)
+        obs.NULL.gauge("g", 2.0)
+
+
+def test_use_none_is_passthrough():
+    rec = obs.Recorder("ambient", compile_counters=False)
+    with obs.use(rec):
+        assert obs.current() is rec
+        with obs.use(None):           # report=None must not clobber
+            assert obs.current() is rec
+    assert obs.current() is obs.NULL
+
+
+def test_kaffpa_identical_with_and_without_recorder():
+    p0 = kaffpa(GRID24, 4, 0.03, "fast", seed=2)
+    rec = obs.Recorder("kaffpa")
+    p1 = kaffpa(GRID24, 4, 0.03, "fast", seed=2, report=rec)
+    assert np.array_equal(p0, p1)
+    names = {e["name"] for e in rec.events if e["ph"] == "B"}
+    assert {"run", "multilevel", "hierarchy", "coarsen", "uncoarsen",
+            "refine"} <= names
+    assert rec.counters().get("refine/rounds", 0) > 0
+
+
+def test_disabled_recorder_overhead_within_noise():
+    """The kaffpa fast cell with obs disabled stays within noise of itself
+    (generous 1.5x bound: same call, warm caches, interleaved timing)."""
+    kaffpa(GRID16, 2, 0.03, "fast", seed=3)     # warm the jit caches
+    times = {"plain": [], "null_ctx": []}
+    for _ in range(3):
+        t0 = time.perf_counter()
+        kaffpa(GRID16, 2, 0.03, "fast", seed=3)
+        times["plain"].append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        with obs.use(None):
+            kaffpa(GRID16, 2, 0.03, "fast", seed=3)
+        times["null_ctx"].append(time.perf_counter() - t0)
+    assert min(times["null_ctx"]) <= 1.5 * min(times["plain"]) + 0.05
+
+
+# -- quality trajectories -----------------------------------------------------
+
+def test_vcycle_trajectory_non_increasing():
+    rec = obs.Recorder("vcycles", compile_counters=False)
+    medium = GraphMedium(GRID24, PRESETS["eco"], recorder=rec)
+    part = ML.run(medium, 4, 0.03, seed=1, vcycles=3)
+    traj = rec.trajectory("cycles")
+    assert len(traj) == 3             # cycle 0 = initial, then 2 V-cycles
+    assert all(b <= a for a, b in zip(traj, traj[1:]))
+    assert traj[-1] == edge_cut(GRID24, part)
+    cycles = rec.trajectories["cycles"]
+    assert [p["cycle"] for p in cycles] == [0, 1, 2]
+    assert all("imbalance" in p for p in cycles)
+
+
+def test_interface_report_kwarg():
+    from repro.core import interface
+    g = GRID16
+    rec = obs.Recorder("iface")
+    cut, part = interface.kaffpa(g.n, None, g.xadj, None, g.adjncy, 2,
+                                 0.03, seed=1, mode=interface.FAST,
+                                 report=rec)
+    assert cut == edge_cut(g, part)
+    assert any(e["name"] == "run" for e in rec.events)
+    assert rec.trajectory("cycles")
