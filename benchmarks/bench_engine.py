@@ -43,14 +43,20 @@ def _cell(name: str, fn, args, score, recorders: list) -> dict:
     import numpy as np
     from repro import obs
     c0 = obs.metrics.get("jax/compiles")
+    p0 = obs.metrics.get("engine/bucket_pads")
+    h0 = obs.metrics.get("engine/compile_cache_hits")
     out, dt = timed_call(fn, *args)
     compile_count = int(obs.metrics.get("jax/compiles") - c0)
+    bucket_pads = int(obs.metrics.get("engine/bucket_pads") - p0)
+    cache_hits = int(obs.metrics.get("engine/compile_cache_hits") - h0)
     rec = obs.Recorder(name)
     out_obs, dt_obs = timed_call(fn, *args, report=rec)
     assert np.array_equal(out, out_obs), f"recorder changed result: {name}"
     recorders.append(rec)
     cell = {"s": round(dt, 2), "s_obs": round(dt_obs, 2),
             "compile_count": compile_count,
+            "bucket_pads": bucket_pads,
+            "compile_cache_hits": cache_hits,
             "trajectory": rec.trajectory("cycles")}
     cell.update(score(out))
     return cell
@@ -94,6 +100,21 @@ def collect(recorders: list) -> dict:
     res["kahypar_eco_hp400_k2"] = _cell(
         "kahypar_eco_hp400_k2", kahypar, (hp, 2, 0.03, "eco", 1),
         hscore(hp, 2), recorders)
+
+    # deep-hierarchy stress (DESIGN.md §12): a tiny stop_n forces many more
+    # levels than any preset — compile sharing across same-bucket levels is
+    # what keeps compile_count flat while the level count triples
+    def kaffpa_deep(g, k, eps, seed, report=None):
+        from repro.core import multilevel as ML
+        from repro.core.kaffpa import GraphMedium, KaffpaConfig
+        cfg = KaffpaConfig(coarsening="matching", refine_rounds=10,
+                           multi_try=2, initial_tries=4,
+                           contraction_stop_factor=2, stop_n_floor=8)
+        return ML.run(GraphMedium(g, cfg, recorder=report), k, eps, seed)
+
+    res["kaffpa_deep_grid32_k2"] = _cell(
+        "kaffpa_deep_grid32_k2", kaffpa_deep, (g32, 2, 0.03, 3),
+        gscore(g32, 2), recorders)
     return res
 
 

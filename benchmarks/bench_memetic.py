@@ -78,6 +78,34 @@ def collect() -> dict:
                                 "obj_mem": cut_e, "s_single": round(dt_s, 2),
                                 "obj_single": cut_s,
                                 "ratio": round(cut_e / max(cut_s, 1), 4)}
+
+    # batched vs sequential island generations (DESIGN.md §12): per-island
+    # sweep keys make the two modes bit-identical, so the cell isolates the
+    # cost of stepping the archipelago one island at a time vs one vmapped
+    # device call per generation
+    import dataclasses as _dc
+    from repro.core import memetic as MEM
+    from repro.core.kaffpa import GraphMedium, PRESETS
+    cfg = MEM.MemeticConfig(n_islands=4, population=2, time_limit=0.0,
+                            generations=GENERATIONS)
+    cfg_seq = _dc.replace(cfg, batched_generations=False)
+    # warm both modes' programs first: at 3 generations a single cold
+    # compile would swamp the per-generation device-call cost under test
+    MEM.evolve_islands(GraphMedium(g, PRESETS["fast"]), 4, 0.03, cfg_seq, 1)
+    MEM.evolve_islands(GraphMedium(g, PRESETS["fast"]), 4, 0.03, cfg, 1)
+    st_seq, dt_seq = _timed(
+        MEM.evolve_islands, GraphMedium(g, PRESETS["fast"]), 4, 0.03,
+        cfg_seq, 1)
+    st_bat, dt_bat = _timed(
+        MEM.evolve_islands, GraphMedium(g, PRESETS["fast"]), 4, 0.03, cfg, 1)
+    assert all(np.array_equal(a.part, b.part)
+               for pa, pb in zip(st_bat.islands, st_seq.islands)
+               for a, b in zip(pa, pb)), "batched generations changed state"
+    res["island_gen_batched_vs_seq_grid20_k4"] = {
+        "objective": "cut", "s_batched": round(dt_bat, 2),
+        "s_sequential": round(dt_seq, 2),
+        "obj": st_bat.best().fitness,
+        "islands": cfg.n_islands}
     return res
 
 

@@ -17,7 +17,13 @@ import sys
 def smoke() -> None:
     from benchmarks import (bench_engine, bench_memetic, bench_nodesep,
                             bench_parhyp)
-    bench_engine.main()
+    eng = bench_engine.main()
+    # compile-count columns (DESIGN.md §12): per cell, cold-run backend
+    # compiles plus the shape-bucket registry's padding/sharing counters
+    print("cell,compile_count,bucket_pads,compile_cache_hits,s")
+    for name, cell in eng["engine"].items():
+        print(f"{name},{cell['compile_count']},{cell['bucket_pads']},"
+              f"{cell['compile_cache_hits']},{cell['s']}")
     bench_nodesep.main()
     bench_parhyp.main()
     bench_memetic.main()

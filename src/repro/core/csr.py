@@ -268,7 +268,9 @@ def to_ell(g: Graph, row_tile: int = 128, d_mult: int = 8,
     dmax = int(deg.max()) if n else 0
     if dmax_cap is not None:
         dmax = min(dmax, dmax_cap)
-    dmax = max(_round_up(max(dmax, 1), d_mult), d_mult)
+    # pow2-bucketed like every other device dim (DESIGN.md §12), so levels
+    # with nearby max degree share one kernel program
+    dmax = _pow2_pad(max(dmax, 1), d_mult)
     n_pad = _pow2_pad(max(n, 1), row_tile)
     nbr = np.full((n_pad, dmax), n_pad - 1, dtype=np.int32)
     wgt = np.zeros((n_pad, dmax), dtype=np.float32)

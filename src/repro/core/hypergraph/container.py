@@ -30,7 +30,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.csr import GraphFormatError, _as1d, _pow2_pad, _round_up
+from repro.core.csr import GraphFormatError, _as1d, _pow2_pad
 
 
 class HypergraphFormatError(GraphFormatError):
@@ -269,7 +269,8 @@ def to_ell_h(hg: Hypergraph, row_tile: int = 128, p_mult: int = 8,
     # net → pins side
     esz = hg.net_sizes()
     pmax = int(esz.max()) if m else 0
-    pmax = max(_round_up(max(pmax, 1), p_mult), p_mult)
+    # pow2-bucketed like every other device dim (DESIGN.md §12)
+    pmax = _pow2_pad(max(pmax, 1), p_mult)
     pins = np.full((e_pad, pmax), n_pad - 1, dtype=np.int32)
     mask = np.zeros((e_pad, pmax), dtype=np.float32)
     pe = hg.pin_sources()
@@ -281,7 +282,7 @@ def to_ell_h(hg: Hypergraph, row_tile: int = 128, p_mult: int = 8,
     # vertex → nets side
     deg = hg.vertex_degrees()
     dvmax = int(deg.max()) if n else 0
-    dvmax = max(_round_up(max(dvmax, 1), d_mult), d_mult)
+    dvmax = _pow2_pad(max(dvmax, 1), d_mult)
     vnets = np.full((n_pad, dvmax), e_pad - 1, dtype=np.int32)
     pv = np.repeat(np.arange(n, dtype=np.int64), deg)
     vrank = np.arange(len(pv)) - hg.vind[pv]

@@ -32,8 +32,16 @@ class KahyparConfig:
     vcycles: int = 1                    # iterated multilevel cycles
     contraction_stop_factor: int = 20   # stop coarsening at ~factor*k nodes
     cluster_weight_factor: float = 3.0  # max cluster weight = W/(factor*k)
+    stop_n_floor: int = 48              # never coarsen below this many nodes
     max_net_size: int = 64              # larger nets use the star fallback
     use_kernel: Optional[bool] = None   # None = Pallas on TPU, COO fallback
+
+    @property
+    def batch_floor(self) -> int:
+        """Shared pow2 batch bucket (DESIGN.md §12): single refines pad up
+        to the tournament width so both run one compiled program."""
+        from repro.core.csr import _pow2_pad
+        return _pow2_pad(max(self.initial_tries, 1), 1)
 
 
 PRESETS = {
@@ -71,7 +79,7 @@ class HypergraphMedium(ML.ViewCache):
             initial_tries=cfg.initial_tries, vcycles=cfg.vcycles,
             contraction_stop_factor=cfg.contraction_stop_factor,
             cluster_weight_factor=cfg.cluster_weight_factor,
-            stop_n_floor=48, recorder=self.recorder)
+            stop_n_floor=cfg.stop_n_floor, recorder=self.recorder)
 
     def total_vwgt(self) -> int:
         return self.hg.total_vwgt()
@@ -104,7 +112,8 @@ class HypergraphMedium(ML.ViewCache):
                                 rounds=self.cfg.refine_rounds, seed=seed,
                                 objective=self.obj,
                                 force_balance=force_balance,
-                                use_kernel=self.use_kernel, hc=hc, ell=ell)
+                                use_kernel=self.use_kernel, hc=hc, ell=ell,
+                                batch_floor=self.cfg.batch_floor)
         rec = ML.recorder_of(self)
         if rec.enabled:
             rec.count("refine/rounds", self.cfg.refine_rounds)
@@ -115,13 +124,14 @@ class HypergraphMedium(ML.ViewCache):
         return out
 
     def refine_batch(self, parts: Sequence[np.ndarray], k: int, eps: float,
-                     seed: int) -> List[np.ndarray]:
+                     seed: int, keys=None) -> List[np.ndarray]:
         hc, ell = self.views
         return refine_hypergraph_batch(self.hg, list(parts), k, eps,
                                        rounds=self.cfg.refine_rounds,
                                        seed=seed, objective=self.obj,
                                        use_kernel=self.use_kernel,
-                                       hc=hc, ell=ell)
+                                       hc=hc, ell=ell, keys=keys,
+                                       batch_floor=self.cfg.batch_floor)
 
     def polish(self, part: np.ndarray, k: int, eps: float,
                seed: int) -> np.ndarray:

@@ -36,13 +36,14 @@ _NOISE = 1e-4
 _GAIN_EPS = 1e-3
 
 
-@functools.partial(jax.jit, static_argnames=("k", "rounds", "objective",
-                                             "use_kernel"))
 def _hyper_refine_scan(hc: PinCoo, labels0: jax.Array, cap: jax.Array,
                        key: jax.Array, k: int, rounds: int,
                        objective: str, force_balance,
                        use_kernel: bool,
                        ell: Optional[EllHypergraph] = None):
+    """One candidate's scan (unjitted; vmapped by `_hyper_refine_scan_batch`
+    — single refines ride the batched program at the medium's batch floor,
+    DESIGN.md §12)."""
     n = hc.n_pad
     vw = hc.vwgt
     w_pin = hc.mask * hc.netw[hc.pe]                      # (p_pad,)
@@ -131,38 +132,18 @@ def _caps_for(hg: Hypergraph, k: int, eps: float) -> np.ndarray:
     return np.full(k, (1.0 + eps) * lmax)
 
 
-def refine_hypergraph(hg: Hypergraph, part: np.ndarray, k: int,
-                      eps: float = 0.03, rounds: int = 12, seed: int = 0,
-                      objective: str = "km1",
-                      force_balance: bool = False,
-                      use_kernel: Optional[bool] = None,
-                      hc: Optional[PinCoo] = None,
-                      ell: Optional[EllHypergraph] = None) -> np.ndarray:
-    """Polish ``part``; never returns a worse feasible objective.
+def k_bucket(k: int) -> int:
+    """pow2 block-count bucket with floor 4 (DESIGN.md §12): scans for
+    k=2..4 (and 5..8, ...) share one compiled program per shape bucket.
+    Fake blocks get zero capacity, so no vertex ever moves into one."""
+    from repro.core.csr import _pow2_pad
+    return _pow2_pad(max(k, 4), 1)
 
-    ``use_kernel=None`` resolves to the backend default (Pallas pin counts
-    on TPU, COO scatter elsewhere); ``hc``/``ell`` accept cached views.
-    """
-    if k <= 1 or hg.n == 0:
-        return np.asarray(part, dtype=np.int64)
-    from repro.core.refine import default_use_kernel
-    use_kernel = default_use_kernel() if use_kernel is None else use_kernel
-    hc = hc if hc is not None else to_pincoo(hg)
-    if use_kernel and ell is None:
-        ell = to_ell_h(hg)
-    cap = jnp.asarray(_caps_for(hg, k, eps), jnp.float32)
-    labels0 = np.zeros(hc.n_pad, dtype=np.int32)
-    labels0[:hg.n] = part
-    out, _ = _hyper_refine_scan(hc, jnp.asarray(labels0), cap,
-                                jax.random.PRNGKey(seed), k, rounds,
-                                objective, force_balance, use_kernel,
-                                ell=ell)
-    out = np.asarray(out, dtype=np.int64)[:hg.n]
-    score = M.connectivity if objective == "km1" else M.cut_net
-    # paranoia: keep the better of (in, out) among feasible options
-    if score(hg, out) <= score(hg, part) or force_balance:
-        return out
-    return np.asarray(part, dtype=np.int64)
+
+def _pad_caps(cap: np.ndarray, k_pad: int) -> np.ndarray:
+    out = np.zeros(k_pad, np.float32)
+    out[:len(cap)] = cap
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("k", "rounds", "objective",
@@ -172,10 +153,66 @@ def _hyper_refine_scan_batch(hc: PinCoo, labels0: jax.Array, cap: jax.Array,
                              rounds: int, objective: str,
                              use_kernel: bool,
                              ell: Optional[EllHypergraph] = None):
+    """THE hypergraph refinement program: everything routes through here."""
     def one(lab0, key, f):
         return _hyper_refine_scan(hc, lab0, cap, key, k, rounds, objective,
                                   f, use_kernel, ell=ell)
     return jax.vmap(one)(labels0, keys, force)
+
+
+def _run_hyper_scan_batch(hc, cap_np, labs, keys, force, k, rounds,
+                          objective, use_kernel, ell, batch_floor):
+    from repro.core import multilevel as ML
+    from repro.core.refine import _pad_rows, batch_bucket
+    b = labs.shape[0]
+    b_pad = batch_bucket(b, batch_floor)
+    k_pad = k_bucket(k)
+    ML.note_bucket_pad(b_pad - b)
+    ML.note_program("hyper", hc.n_pad, hc.e_pad, hc.p_pad, k_pad, rounds,
+                    objective, b_pad, use_kernel)
+    outs, _ = _hyper_refine_scan_batch(
+        hc, jnp.asarray(_pad_rows(labs, b_pad)),
+        jnp.asarray(_pad_caps(np.asarray(cap_np), k_pad)),
+        jnp.asarray(_pad_rows(keys, b_pad)),
+        jnp.asarray(_pad_rows(force, b_pad)),
+        k_pad, rounds, objective, use_kernel, ell=ell)
+    return np.asarray(outs, dtype=np.int64)[:b]
+
+
+def refine_hypergraph(hg: Hypergraph, part: np.ndarray, k: int,
+                      eps: float = 0.03, rounds: int = 12, seed: int = 0,
+                      objective: str = "km1",
+                      force_balance: bool = False,
+                      use_kernel: Optional[bool] = None,
+                      hc: Optional[PinCoo] = None,
+                      ell: Optional[EllHypergraph] = None,
+                      batch_floor: int = 1) -> np.ndarray:
+    """Polish ``part``; never returns a worse feasible objective.
+
+    ``use_kernel=None`` resolves to the backend default (Pallas pin counts
+    on TPU, COO scatter elsewhere); ``hc``/``ell`` accept cached views.
+    ``batch_floor`` pads the batch dim up to the medium's bucket so this
+    single call reuses the tournament's compiled program.
+    """
+    if k <= 1 or hg.n == 0:
+        return np.asarray(part, dtype=np.int64)
+    from repro.core.refine import default_use_kernel
+    use_kernel = default_use_kernel() if use_kernel is None else use_kernel
+    hc = hc if hc is not None else to_pincoo(hg)
+    if use_kernel and ell is None:
+        ell = to_ell_h(hg)
+    labs = np.zeros((1, hc.n_pad), dtype=np.int32)
+    labs[0, :hg.n] = part
+    keys = np.asarray(jax.random.PRNGKey(seed))[None]
+    outs = _run_hyper_scan_batch(hc, _caps_for(hg, k, eps), labs, keys,
+                                 np.asarray([force_balance]), k, rounds,
+                                 objective, use_kernel, ell, batch_floor)
+    out = outs[0][:hg.n]
+    score = M.connectivity if objective == "km1" else M.cut_net
+    # paranoia: keep the better of (in, out) among feasible options
+    if score(hg, out) <= score(hg, part) or force_balance:
+        return out
+    return np.asarray(part, dtype=np.int64)
 
 
 def refine_hypergraph_batch(hg: Hypergraph, parts: list, k: int,
@@ -183,9 +220,14 @@ def refine_hypergraph_batch(hg: Hypergraph, parts: list, k: int,
                             seed: int = 0, objective: str = "km1",
                             use_kernel: Optional[bool] = None,
                             hc: Optional[PinCoo] = None,
-                            ell: Optional[EllHypergraph] = None) -> list:
+                            ell: Optional[EllHypergraph] = None,
+                            keys: Optional[np.ndarray] = None,
+                            batch_floor: int = 1) -> list:
     """Refine several candidate partitions in one vmapped device call (the
-    initial-partition tournament shares a single compile)."""
+    initial-partition tournament shares a single compile).  ``keys``
+    overrides the per-candidate PRNG keys (shape ``(b, 2)``) — the memetic
+    sweep passes per-island keys so each island's trajectory is independent
+    of how many islands are batched together."""
     if k <= 1 or hg.n == 0 or not parts:
         return [np.asarray(p, dtype=np.int64) for p in parts]
     from repro.core.refine import default_use_kernel
@@ -193,16 +235,17 @@ def refine_hypergraph_batch(hg: Hypergraph, parts: list, k: int,
     hc = hc if hc is not None else to_pincoo(hg)
     if use_kernel and ell is None:
         ell = to_ell_h(hg)
-    cap = jnp.asarray(_caps_for(hg, k, eps), jnp.float32)
     labs = np.zeros((len(parts), hc.n_pad), dtype=np.int32)
     for i, p in enumerate(parts):
         labs[i, :hg.n] = p
     force = np.asarray([not M.is_feasible(hg, p, k, eps) for p in parts])
-    keys = jax.random.split(jax.random.PRNGKey(seed), len(parts))
-    outs, _ = _hyper_refine_scan_batch(hc, jnp.asarray(labs), cap, keys,
-                                       jnp.asarray(force), k, rounds,
-                                       objective, use_kernel, ell=ell)
-    outs = np.asarray(outs, dtype=np.int64)[:, :hg.n]
+    if keys is None:
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(seed),
+                                           len(parts)))
+    outs = _run_hyper_scan_batch(hc, _caps_for(hg, k, eps), labs,
+                                 np.asarray(keys), force, k, rounds,
+                                 objective, use_kernel, ell, batch_floor)
+    outs = outs[:, :hg.n]
     score = M.connectivity if objective == "km1" else M.cut_net
     result = []
     for i, p in enumerate(parts):

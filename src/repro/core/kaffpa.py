@@ -43,7 +43,15 @@ class KaffpaConfig:
     vcycles: int = 1                    # iterated multilevel cycles
     contraction_stop_factor: int = 40   # stop coarsening at ~factor*k nodes
     cluster_weight_factor: float = 3.0  # max cluster weight = W/(factor*k)
+    stop_n_floor: int = 64              # never coarsen below this many nodes
     use_kernel: Optional[bool] = None   # None = Pallas on TPU, COO fallback
+
+    @property
+    def batch_floor(self) -> int:
+        """Shared pow2 batch bucket (DESIGN.md §12): single refines pad up
+        to the tournament width so both run one compiled program."""
+        from repro.core.csr import _pow2_pad
+        return _pow2_pad(max(self.initial_tries, 1), 1)
 
 
 PRESETS = {
@@ -89,7 +97,7 @@ class GraphMedium(ML.ViewCache):
             initial_tries=cfg.initial_tries, vcycles=cfg.vcycles,
             contraction_stop_factor=cfg.contraction_stop_factor,
             cluster_weight_factor=cfg.cluster_weight_factor,
-            stop_n_floor=64, recorder=self.recorder)
+            stop_n_floor=cfg.stop_n_floor, recorder=self.recorder)
 
     def total_vwgt(self) -> int:
         return self.g.total_vwgt()
@@ -129,7 +137,8 @@ class GraphMedium(ML.ViewCache):
         out = R.refine_kway(g, part, k, eps, rounds=cfg.refine_rounds,
                             seed=seed, coo=coo, ell=ell,
                             use_kernel=self.use_kernel,
-                            force_balance=force_balance)
+                            force_balance=force_balance,
+                            batch_floor=cfg.batch_floor)
         rec = ML.recorder_of(self)
         if rec.enabled:
             rec.count("refine/rounds", cfg.refine_rounds)
@@ -140,12 +149,13 @@ class GraphMedium(ML.ViewCache):
         return self.polish(out, k, eps, seed)
 
     def refine_batch(self, parts: Sequence[np.ndarray], k: int, eps: float,
-                     seed: int) -> List[np.ndarray]:
+                     seed: int, keys=None) -> List[np.ndarray]:
         coo, ell = self.views
         return R.refine_kway_batch(self.g, list(parts), k, eps,
                                    rounds=self.cfg.refine_rounds, seed=seed,
                                    coo=coo, ell=ell,
-                                   use_kernel=self.use_kernel)
+                                   use_kernel=self.use_kernel, keys=keys,
+                                   batch_floor=self.cfg.batch_floor)
 
     def polish(self, part: np.ndarray, k: int, eps: float,
                seed: int) -> np.ndarray:
@@ -154,7 +164,9 @@ class GraphMedium(ML.ViewCache):
         if cfg.multi_try:
             part = R.multi_try_refine(g, part, k, eps, tries=cfg.multi_try,
                                       rounds=max(4, cfg.refine_rounds // 2),
-                                      seed=seed, coo=coo)
+                                      seed=seed, coo=coo,
+                                      batch_floor=cfg.batch_floor,
+                                      rounds_bucket=cfg.refine_rounds)
         if cfg.use_flow and g.n <= cfg.flow_max_n and k <= 16:
             part = R.flow_refine_all_pairs(g, part, k, eps, seed=seed)
         return part
@@ -167,7 +179,8 @@ class GraphMedium(ML.ViewCache):
         def refine2(sub: Graph, two: np.ndarray, frac0: float) -> np.ndarray:
             fr = np.asarray([frac0, 1.0 - frac0])
             return R.refine_kway(sub, two, 2, eps, rounds=cfg.refine_rounds,
-                                 seed=seed, fractions=fr)
+                                 seed=seed, fractions=fr,
+                                 batch_floor=cfg.batch_floor)
 
         fn = refine2 if g.n <= 20000 else None
         return [I.recursive_bisection(g, k, seed=seed + 101 * t, refine_fn=fn)

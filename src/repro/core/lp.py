@@ -95,7 +95,9 @@ def kway_lp_round(g: CooGraph, labels: jax.Array, sizes: jax.Array,
     gain = jnp.where(room, gain, _NEG)
     best_gain = jnp.max(gain, axis=1)
     best_tgt = jnp.argmax(gain, axis=1).astype(labels.dtype)
-    thresh = -_GAIN_EPS if allow_zero_gain else _GAIN_EPS
+    # traced flag (like force_balance): zero-gain admission rides the batch
+    # dim instead of forking the compiled program per variant
+    thresh = jnp.where(jnp.asarray(allow_zero_gain), -_GAIN_EPS, _GAIN_EPS)
     want = best_gain > thresh
     # overweight blocks push nodes out regardless of gain (when forced)
     over = sizes[labels] > cap[labels]
@@ -186,8 +188,10 @@ def size_constrained_lp(g: Graph, max_cluster_weight: float,
     """The ``label_propagation`` program: returns a clustering (host ints)."""
     coo = coo if coo is not None else to_coo(g)
     n_pad = coo.n_pad
-    labels0 = jnp.arange(n_pad, dtype=jnp.int32)
-    cap = jnp.full((n_pad,), float(max_cluster_weight), jnp.float32)
+    # host-built constants: jnp.arange/jnp.full would each compile a
+    # one-op program (iota / broadcast_in_dim) per shape
+    labels0 = jnp.asarray(np.arange(n_pad, dtype=np.int32))
+    cap = jnp.asarray(np.full(n_pad, max_cluster_weight, np.float32))
     labels, _ = _cluster_lp_jit(coo, labels0, cap, jax.random.PRNGKey(seed),
                                 iters)
     return np.asarray(labels)[:g.n]

@@ -36,6 +36,7 @@ STRIDE_ISLAND = 1009
 STRIDE_MEMBER = 31
 STRIDE_COMBINE = 7919
 STRIDE_MUTATE = 104729
+STRIDE_SWEEP = 2377
 
 
 def island_seed(seed: int, isl: int) -> int:
@@ -77,6 +78,7 @@ class MemeticConfig:
     migration_interval: int = 1
     replacement: str = "worst"          # worst | balanced
     quickstart: bool = False
+    batched_generations: bool = True    # one vmapped sweep for all islands
 
 
 def _replace_key(cfg: MemeticConfig) -> Callable:
@@ -99,14 +101,12 @@ def _replace_key(cfg: MemeticConfig) -> Callable:
                         ind.stamp)
 
 
-def _island_step(medium: ML.Medium, k: int, eps: float, cfg: MemeticConfig,
-                 pop: List[Individual], rng: np.random.Generator,
-                 iseed: int, gen: int, make: Callable,
-                 polish_fn: Optional[Callable], rkey: Callable,
-                 rec=None) -> None:
-    """One generation on one island: select, combine/mutate, polish,
-    replace.  All randomness comes from the island's own stream."""
-    rec = rec if rec is not None else ML.recorder_of(medium)
+def _island_child(medium: ML.Medium, k: int, eps: float, cfg: MemeticConfig,
+                  pop: List[Individual], rng: np.random.Generator,
+                  iseed: int, gen: int, rec) -> tuple:
+    """Produce one island's child for this generation: select then
+    combine/mutate.  All randomness comes from the island's own stream.
+    Returns (child, stamp)."""
     if rng.random() < cfg.combine_prob and len(pop) >= 2:
         ia, ib = (int(x) for x in rng.choice(len(pop), size=2, replace=False))
         pa = pop[ia] if pop[ia].key() <= pop[ib].key() else pop[ib]
@@ -120,13 +120,41 @@ def _island_step(medium: ML.Medium, k: int, eps: float, cfg: MemeticConfig,
         stamp = iseed + STRIDE_MUTATE * gen
         child = ML.vcycle(medium, src.part, k, eps, stamp)
         rec.count("memetic/mutations")
-    if polish_fn is not None:
-        child = polish_fn(child, stamp)
-    ind = make(child, stamp)
+    return child, stamp
+
+
+def _island_accept(pop: List[Individual], ind: Individual, rkey: Callable,
+                   rec) -> None:
+    """Replace the island's worst member (under the variant rule) if the
+    child is no worse."""
     w = max(range(len(pop)), key=lambda j: rkey(pop[j]))
     if rkey(ind) <= rkey(pop[w]):
         pop[w] = ind
         rec.count("memetic/replacements")
+
+
+def _sweep_keys(seed: int, islands: List[int], gen: int) -> np.ndarray:
+    """Per-island sweep keys (B, 2): island i's key depends only on
+    (seed, i, gen), so the batched sweep row equals a solo island's —
+    vmap row independence keeps the independence contract intact."""
+    import jax
+    return np.stack([np.asarray(jax.random.PRNGKey(
+        island_seed(seed, isl) + STRIDE_SWEEP * gen)) for isl in islands])
+
+
+def _generation_sweep(medium: ML.Medium, k: int, eps: float,
+                      cfg: MemeticConfig, children: List[np.ndarray],
+                      keys: np.ndarray) -> List[np.ndarray]:
+    """The archipelago's generation step on the device: every island's
+    child rides ONE vmapped refinement call (DESIGN.md §12) — the same
+    shape-bucketed program as the initial tournaments, stepping all
+    islands together.  ``batched_generations=False`` issues one call per
+    island instead; per-island keys make the results identical, so the
+    knob is purely a performance choice (pinned by a test)."""
+    if cfg.batched_generations:
+        return medium.refine_batch(children, k, eps, 0, keys=keys)
+    return [medium.refine_batch([c], k, eps, 0, keys=keys[i:i + 1])[0]
+            for i, c in enumerate(children)]
 
 
 def _migration_round(state: IslandState, drv_rng: np.random.Generator,
@@ -225,11 +253,25 @@ def evolve_islands(medium: ML.Medium, k: int, eps: float,
     while more(gen):
         gen += 1
         with rec.span("generation", gen=gen):
+            children, stamps = [], []
             for isl in range(cfg.n_islands):
                 with rec.span("island_step", island=isl):
-                    _island_step(medium, k, eps, cfg, state.islands[isl],
-                                 rngs[isl], island_seed(seed, isl), gen,
-                                 make, polish_fn, rkey, rec=rec)
+                    child, stamp = _island_child(
+                        medium, k, eps, cfg, state.islands[isl], rngs[isl],
+                        island_seed(seed, isl), gen, rec)
+                children.append(child)
+                stamps.append(stamp)
+            with rec.span("generation_sweep", gen=gen,
+                          islands=cfg.n_islands):
+                keys = _sweep_keys(seed, list(range(cfg.n_islands)), gen)
+                children = _generation_sweep(medium, k, eps, cfg,
+                                             children, keys)
+            for isl in range(cfg.n_islands):
+                child = children[isl]
+                if polish_fn is not None:
+                    child = polish_fn(child, stamps[isl])
+                _island_accept(state.islands[isl], make(child, stamps[isl]),
+                               rkey, rec)
             if (cfg.migrate and cfg.n_islands > 1
                     and gen % cfg.migration_interval == 0):
                 with rec.span("migration", gen=gen):

@@ -76,6 +76,28 @@ def _note_view_build() -> None:
     obs.metrics.inc("engine/view_builds")
 
 
+# Program-identity registry for the one-compile engine (DESIGN.md §12):
+# every batched refinement entry reports the static signature of the
+# program it is about to run.  First sighting → ``engine/programs``
+# (a compile is expected); repeat → ``engine/compile_cache_hits`` (the
+# jit cache serves it).  ``engine/bucket_pads`` counts the padding rows
+# spent to reach the shared pow2 batch bucket.
+_seen_programs: set = set()
+
+
+def note_program(*sig) -> None:
+    if sig in _seen_programs:
+        obs.metrics.inc("engine/compile_cache_hits")
+    else:
+        _seen_programs.add(sig)
+        obs.metrics.inc("engine/programs")
+
+
+def note_bucket_pad(nrows: int) -> None:
+    if nrows:
+        obs.metrics.inc("engine/bucket_pads", nrows)
+
+
 class ViewCache:
     """Mixin: lazily build device views once per medium instance.
 
@@ -274,6 +296,32 @@ def build_hierarchy(medium: Medium, k: int, seed: int,
 # initial partitioning: batched tournament on the coarsest level
 # ---------------------------------------------------------------------------
 
+def _tournament_pick(medium: Medium, refined: Sequence[np.ndarray], k: int,
+                     eps: float, seed: int) -> np.ndarray:
+    """Winner tail shared by `initial_partition` and the wave variant:
+    pick the best feasible candidate (best-any fallback) and polish it."""
+    rec = recorder_of(medium)
+    rec.count("engine/initial_tries", len(refined))
+    best, best_obj = None, np.inf
+    best_any, best_any_obj = None, np.inf
+    for part in refined:
+        obj = medium.objective(part)
+        if obj < best_any_obj:
+            best_any, best_any_obj = part, obj
+        if obj < best_obj and medium.is_feasible(part, k, eps):
+            best, best_obj = part, obj
+    # no feasible candidate: seed from the best objective anyway — the
+    # uncoarsening refiners force balance back (tight-eps media hit this)
+    if best is None:
+        best = best_any
+        rec.count("engine/tournament_infeasible")
+    if rec.enabled:
+        rec.point("initial", n=medium.n,
+                  objective=min(best_obj, best_any_obj),
+                  feasible=best_obj < np.inf)
+    return medium.polish(best, k, eps, seed)
+
+
 def initial_partition(level: Level, k: int, eps: float, seed: int
                       ) -> np.ndarray:
     """Tournament over ``initial_tries`` candidates.
@@ -287,25 +335,47 @@ def initial_partition(level: Level, k: int, eps: float, seed: int
     with rec.span("initial_tournament", n=medium.n, k=k):
         cands = medium.initial_candidates(k, eps, seed)
         refined = medium.refine_batch(cands, k, eps, seed)
-        rec.count("engine/initial_tries", len(cands))
-        best, best_obj = None, np.inf
-        best_any, best_any_obj = None, np.inf
-        for part in refined:
-            obj = medium.objective(part)
-            if obj < best_any_obj:
-                best_any, best_any_obj = part, obj
-            if obj < best_obj and medium.is_feasible(part, k, eps):
-                best, best_obj = part, obj
-        # no feasible candidate: seed from the best objective anyway — the
-        # uncoarsening refiners force balance back (tight-eps media hit this)
-        if best is None:
-            best = best_any
-            rec.count("engine/tournament_infeasible")
-        if rec.enabled:
-            rec.point("initial", n=medium.n,
-                      objective=min(best_obj, best_any_obj),
-                      feasible=best_obj < np.inf)
-        return medium.polish(best, k, eps, seed)
+        return _tournament_pick(medium, refined, k, eps, seed)
+
+
+def initial_partition_wave(levels: Sequence[Level], k: int, eps: float,
+                           seeds: Sequence[int]) -> List[np.ndarray]:
+    """Tournaments for SEVERAL coarsest levels in batched device calls.
+
+    Sibling subproblems (nested-dissection wave, DESIGN.md §12) usually
+    land in the same pow2 shape bucket; levels whose media report the same
+    ``bucket_key()`` get their stacked candidate tournaments refined by one
+    ``refine_multi`` call instead of one call per subproblem.  Per level
+    the result is bit-identical to ``initial_partition`` — rows carry the
+    same per-level keys, so batching only changes which compiled program
+    runs them.  Media without bucket_key/refine_multi fall back per level.
+    """
+    media = [lv.medium for lv in levels]
+    if (len(levels) < 2
+            or any(not hasattr(m, "bucket_key")
+                   or not hasattr(m, "refine_multi") for m in media)):
+        return [initial_partition(lv, k, eps, s)
+                for lv, s in zip(levels, seeds)]
+    cands = [m.initial_candidates(k, eps, s) for m, s in zip(media, seeds)]
+    groups: dict = {}
+    for i, m in enumerate(media):
+        groups.setdefault(m.bucket_key(), []).append(i)
+    refined: List[Optional[List[np.ndarray]]] = [None] * len(levels)
+    for idx in groups.values():
+        if len(idx) == 1:
+            i = idx[0]
+            refined[i] = media[i].refine_batch(cands[i], k, eps, seeds[i])
+        else:
+            outs = media[idx[0]].refine_multi(
+                [media[i] for i in idx], [cands[i] for i in idx],
+                k, eps, [seeds[i] for i in idx])
+            for j, i in enumerate(idx):
+                refined[i] = outs[j]
+    picks = []
+    for i, m in enumerate(media):
+        with recorder_of(m).span("initial_tournament", n=m.n, k=k):
+            picks.append(_tournament_pick(m, refined[i], k, eps, seeds[i]))
+    return picks
 
 
 # ---------------------------------------------------------------------------

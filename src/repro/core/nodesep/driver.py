@@ -32,6 +32,7 @@ from repro.core.nodesep.refine import (SEP, boundary_to_separator,
                                        flow_separator_polish,
                                        refine_separator,
                                        refine_separator_batch,
+                                       refine_separator_multi,
                                        separator_invariant_ok,
                                        separator_is_feasible,
                                        separator_weight,
@@ -55,6 +56,13 @@ class NodesepConfig:
     flow_max_n: int = 6000
     flow_band_depth: int = 3
     use_kernel: Optional[bool] = None   # None = Pallas on TPU, COO fallback
+
+    @property
+    def batch_floor(self) -> int:
+        """Shared pow2 batch bucket (DESIGN.md §12): single refines pad up
+        to the tournament width so both run one compiled program."""
+        from repro.core.csr import _pow2_pad
+        return _pow2_pad(max(self.initial_tries, 1), 1)
 
 
 PRESETS = {
@@ -139,7 +147,8 @@ class SeparatorMedium(ML.ViewCache):
         part = refine_separator(self.g, part, eps,
                                 rounds=self.cfg.refine_rounds, seed=seed,
                                 coo=coo, ell=ell, use_kernel=self.use_kernel,
-                                force_balance=force_balance)
+                                force_balance=force_balance,
+                                batch_floor=self.cfg.batch_floor)
         if rec.enabled:
             rec.count("refine/rounds", self.cfg.refine_rounds)
             if force_balance:
@@ -174,25 +183,48 @@ class SeparatorMedium(ML.ViewCache):
         from repro.core.partition import is_feasible
         two = R.refine_kway(g, two, 2, eps, rounds=self.cfg.bisect_rounds,
                             seed=seed + 7, coo=coo,
-                            force_balance=not is_feasible(g, two, 2, eps))
+                            force_balance=not is_feasible(g, two, 2, eps),
+                            batch_floor=self.cfg.batch_floor)
         if self.cfg.multi_try:
             two = R.multi_try_refine(g, two, 2, eps,
                                      tries=self.cfg.multi_try,
                                      rounds=self.cfg.bisect_rounds,
-                                     seed=seed + 11, coo=coo)
+                                     seed=seed + 11, coo=coo,
+                                     batch_floor=self.cfg.batch_floor)
         cand = boundary_to_separator(g, two)
         cand = refine_separator(g, cand, eps, rounds=self.cfg.refine_rounds,
                                 seed=seed + 13, coo=coo, ell=ell,
-                                use_kernel=self.use_kernel)
+                                use_kernel=self.use_kernel,
+                                batch_floor=self.cfg.batch_floor)
         return self.polish(cand, 2, eps, seed)
 
     def refine_batch(self, parts: Sequence[np.ndarray], k: int, eps: float,
-                     seed: int) -> List[np.ndarray]:
+                     seed: int, keys=None) -> List[np.ndarray]:
         coo, ell = self.views
         return refine_separator_batch(self.g, list(parts), eps,
                                       rounds=self.cfg.refine_rounds,
                                       seed=seed, coo=coo, ell=ell,
-                                      use_kernel=self.use_kernel)
+                                      use_kernel=self.use_kernel, keys=keys,
+                                      batch_floor=self.cfg.batch_floor)
+
+    def bucket_key(self):
+        """Shape-bucket identity for the ND wave (DESIGN.md §12): media
+        agreeing on this key share one batched tournament program."""
+        coo, _ = self.views
+        return ("sep", coo.n_pad, coo.e_pad, self.cfg.refine_rounds,
+                self.use_kernel)
+
+    def refine_multi(self, media: Sequence["SeparatorMedium"],
+                     cands_lists: Sequence[Sequence[np.ndarray]], k: int,
+                     eps: float, seeds: Sequence[int]
+                     ) -> List[List[np.ndarray]]:
+        """Cross-graph batched tournament refine for same-bucket siblings
+        (invoked via `ML.initial_partition_wave`)."""
+        return refine_separator_multi([m.g for m in media],
+                                      [list(c) for c in cands_lists], eps,
+                                      rounds=self.cfg.refine_rounds,
+                                      seeds=list(seeds),
+                                      coos=[m.views[0] for m in media])
 
     def polish(self, part: np.ndarray, k: int, eps: float,
                seed: int) -> np.ndarray:
@@ -218,7 +250,8 @@ class SeparatorMedium(ML.ViewCache):
         for t in range(cfg.initial_tries):
             two = I.bfs_grow_bisection(g, 0.5, seed=seed + 101 * t)
             two = R.refine_kway(g, two, 2, eps, rounds=cfg.bisect_rounds,
-                                seed=seed + 101 * t, coo=coo)
+                                seed=seed + 101 * t, coo=coo,
+                                batch_floor=cfg.batch_floor)
             cands.append(boundary_to_separator(g, two))
         return cands
 
@@ -281,6 +314,39 @@ def nodesep_labels(g: Graph, eps: float = 0.20, preset: str = "eco",
     medium = SeparatorMedium(g, PRESETS[preset], recorder=report)
     return ML.run(medium, 2, eps, seed, vcycles=vcycles,
                   time_limit=time_limit)
+
+
+def nodesep_labels_wave(graphs: Sequence[Graph], eps: float = 0.20,
+                        preset: str = "eco",
+                        seeds: Optional[Sequence[int]] = None,
+                        report=None) -> List[np.ndarray]:
+    """3-label separators for SEVERAL graphs, batching across siblings.
+
+    The nested-dissection recursion (core/ordering.py) calls this on waves
+    of sibling subproblems: hierarchies are built per graph, then the
+    coarsest-level tournaments of same-shape-bucket siblings run as one
+    batched device call (`ML.initial_partition_wave`, DESIGN.md §12).
+    Per graph the result is bit-identical to ``nodesep_labels(graphs[i],
+    eps, preset, seed=seeds[i])`` without a time budget.
+    """
+    seeds = list(seeds) if seeds is not None else [0] * len(graphs)
+    cfg = PRESETS[preset]
+    results: List[Optional[np.ndarray]] = [None] * len(graphs)
+    hier = []
+    for i, g in enumerate(graphs):
+        if g.n == 0:
+            results[i] = np.zeros(0, dtype=np.int64)
+            continue
+        m = SeparatorMedium(g, cfg, recorder=report)
+        hier.append((i, m, ML.build_hierarchy(m, 2, seeds[i])))
+    parts_c = ML.initial_partition_wave([lv[-1] for _, _, lv in hier], 2,
+                                        eps, [seeds[i] for i, _, _ in hier])
+    for (i, m, lv), pc in zip(hier, parts_c):
+        part = ML.uncoarsen(lv, pc, 2, eps, seeds[i])
+        for cyc in range(1, m.params.vcycles):
+            part = ML.vcycle(m, part, 2, eps, seeds[i] + 7919 * cyc)
+        results[i] = part
+    return results
 
 
 def memetic_nodesep_labels(g: Graph, eps: float = 0.20, preset: str = "eco",

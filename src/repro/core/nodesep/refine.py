@@ -70,12 +70,15 @@ def sep_affinity_ell(ell: EllGraph, labels: jax.Array,
 # the separator LP/FM scan
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("rounds", "use_kernel"))
 def _sep_refine_scan(g: CooGraph, labels0: jax.Array, cap: jax.Array,
                      key: jax.Array, rounds: int, force_balance,
                      ell: Optional[EllGraph] = None,
                      use_kernel: bool = False):
     """``rounds`` one-side-per-round separator moves with undo-to-best.
+
+    Unjitted scan body — vmapped by `_sep_refine_scan_batch` (shared graph)
+    and `_sep_refine_scan_multi` (stacked sibling graphs, DESIGN.md §12);
+    single refines ride the batched program at the medium's batch floor.
 
     ``cap`` is (2,) — the block-size caps for A and B; S is uncapped (its
     weight *is* the objective).  ``force_balance`` may be a Python bool or a
@@ -163,10 +166,25 @@ def _sep_refine_scan_batch(g: CooGraph, labels0: jax.Array, cap: jax.Array,
                            keys: jax.Array, force: jax.Array, rounds: int,
                            ell: Optional[EllGraph] = None,
                            use_kernel: bool = False):
+    """THE separator refinement program (one graph, b candidates)."""
     def one(lab0, key, f):
         return _sep_refine_scan(g, lab0, cap, key, rounds, f, ell=ell,
                                 use_kernel=use_kernel)
     return jax.vmap(one)(labels0, keys, force)
+
+
+@functools.partial(jax.jit, static_argnames=("rounds", "use_kernel"))
+def _sep_refine_scan_multi(gs: CooGraph, labels0: jax.Array, caps: jax.Array,
+                           keys: jax.Array, force: jax.Array, rounds: int,
+                           use_kernel: bool = False):
+    """Batched tournament over *stacked sibling graphs* at one shape bucket
+    (nested-dissection wave, DESIGN.md §12): ``gs`` is a CooGraph whose
+    arrays carry a leading batch dim; row i refines candidate i on graph i
+    under caps ``caps[i]`` (B, 2)."""
+    def one(g, lab0, cap, key, f):
+        return _sep_refine_scan(g, lab0, cap, key, rounds, f, ell=None,
+                                use_kernel=use_kernel)
+    return jax.vmap(one)(gs, labels0, caps, keys, force)
 
 
 # ---------------------------------------------------------------------------
@@ -205,12 +223,30 @@ def _pad_labels3(labels: np.ndarray, n_pad: int) -> jnp.ndarray:
     return jnp.asarray(lab)
 
 
+def _run_sep_scan_batch(coo, cap_np, labs, keys, force, rounds,
+                        ell, use_kernel, batch_floor):
+    from repro.core import multilevel as ML
+    from repro.core.refine import _pad_rows, batch_bucket
+    b = labs.shape[0]
+    b_pad = batch_bucket(b, batch_floor)
+    ML.note_bucket_pad(b_pad - b)
+    ML.note_program("sep", coo.n_pad, coo.e_pad, rounds, b_pad, use_kernel)
+    outs, _ = _sep_refine_scan_batch(
+        coo, jnp.asarray(_pad_rows(labs, b_pad)),
+        jnp.asarray(np.asarray(cap_np, np.float32)),
+        jnp.asarray(_pad_rows(keys, b_pad)),
+        jnp.asarray(_pad_rows(force, b_pad)),
+        rounds, ell=ell, use_kernel=use_kernel)
+    return np.asarray(outs, dtype=np.int64)[:b]
+
+
 def refine_separator(g: Graph, labels: np.ndarray, eps: float = 0.20,
                      rounds: int = 10, seed: int = 0,
                      coo: Optional[CooGraph] = None,
                      ell: Optional[EllGraph] = None,
                      use_kernel: Optional[bool] = None,
-                     force_balance: bool = False) -> np.ndarray:
+                     force_balance: bool = False,
+                     batch_floor: int = 1) -> np.ndarray:
     """Polish a 3-label state; never worsens a feasible separator weight."""
     if g.n == 0:
         return np.asarray(labels, dtype=np.int64)
@@ -219,12 +255,13 @@ def refine_separator(g: Graph, labels: np.ndarray, eps: float = 0.20,
     coo = coo if coo is not None else to_coo(g)
     if use_kernel and ell is None:
         ell = to_ell(g, row_tile=coo.n_pad)
-    cap = jnp.asarray(separator_caps(g, eps), jnp.float32)
-    lab0 = _pad_labels3(labels, coo.n_pad)
-    out, _ = _sep_refine_scan(coo, lab0, cap, jax.random.PRNGKey(seed),
-                              rounds, force_balance, ell=ell,
-                              use_kernel=use_kernel)
-    out = np.asarray(out, dtype=np.int64)[:g.n]
+    labs = np.zeros((1, coo.n_pad), dtype=np.int32)
+    labs[0, :g.n] = labels
+    keys = np.asarray(jax.random.PRNGKey(seed))[None]
+    outs = _run_sep_scan_batch(coo, separator_caps(g, eps), labs, keys,
+                               np.asarray([force_balance]), rounds,
+                               ell, use_kernel, batch_floor)
+    out = outs[0][:g.n]
     # paranoia: keep the better of (in, out) among feasible options
     if force_balance:
         return out
@@ -238,8 +275,9 @@ def refine_separator_batch(g: Graph, cands: List[np.ndarray],
                            eps: float = 0.20, rounds: int = 10, seed: int = 0,
                            coo: Optional[CooGraph] = None,
                            ell: Optional[EllGraph] = None,
-                           use_kernel: Optional[bool] = None
-                           ) -> List[np.ndarray]:
+                           use_kernel: Optional[bool] = None,
+                           keys: Optional[np.ndarray] = None,
+                           batch_floor: int = 1) -> List[np.ndarray]:
     """Refine several 3-label candidates in one vmapped device call."""
     if g.n == 0 or not cands:
         return [np.asarray(c, dtype=np.int64) for c in cands]
@@ -248,16 +286,17 @@ def refine_separator_batch(g: Graph, cands: List[np.ndarray],
     coo = coo if coo is not None else to_coo(g)
     if use_kernel and ell is None:
         ell = to_ell(g, row_tile=coo.n_pad)
-    cap = jnp.asarray(separator_caps(g, eps), jnp.float32)
     labs = np.zeros((len(cands), coo.n_pad), dtype=np.int32)
     for i, c in enumerate(cands):
         labs[i, :g.n] = c
     force = np.asarray([not separator_is_feasible(g, c, eps) for c in cands])
-    keys = jax.random.split(jax.random.PRNGKey(seed), len(cands))
-    outs, _ = _sep_refine_scan_batch(coo, jnp.asarray(labs), cap, keys,
-                                     jnp.asarray(force), rounds, ell=ell,
-                                     use_kernel=use_kernel)
-    outs = np.asarray(outs, dtype=np.int64)[:, :g.n]
+    if keys is None:
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(seed),
+                                           len(cands)))
+    outs = _run_sep_scan_batch(coo, separator_caps(g, eps), labs,
+                               np.asarray(keys), force, rounds,
+                               ell, use_kernel, batch_floor)
+    outs = outs[:, :g.n]
     result = []
     for i, c in enumerate(cands):
         if (separator_weight(g, outs[i]) <= separator_weight(g, c)
@@ -265,6 +304,80 @@ def refine_separator_batch(g: Graph, cands: List[np.ndarray],
             result.append(outs[i])
         else:
             result.append(np.asarray(c, dtype=np.int64))
+    return result
+
+
+def refine_separator_multi(graphs: List[Graph],
+                           cands_lists: List[List[np.ndarray]],
+                           eps: float = 0.20, rounds: int = 10,
+                           seeds: Optional[List[int]] = None,
+                           coos: Optional[List[CooGraph]] = None
+                           ) -> List[List[np.ndarray]]:
+    """Refine the candidate tournaments of several *sibling graphs sharing
+    one shape bucket* in a single vmapped device call (DESIGN.md §12).
+
+    Per graph this is bit-identical to ``refine_separator_batch(graphs[i],
+    cands_lists[i], seed=seeds[i])`` — rows carry per-graph keys
+    ``split(PRNGKey(seeds[i]), len(cands_lists[i]))``, caps and arrays, so
+    batching changes only which compiled program runs them.
+    """
+    if not graphs:
+        return []
+    seeds = seeds if seeds is not None else [0] * len(graphs)
+    coos = coos if coos is not None else [to_coo(g) for g in graphs]
+    n_pad = coos[0].n_pad
+    e_pad = coos[0].e_pad
+    assert all(c.n_pad == n_pad and c.e_pad == e_pad for c in coos), \
+        "refine_separator_multi requires one shape bucket"
+    rows_g, rows_lab, rows_cap, rows_key, rows_force = [], [], [], [], []
+    owner = []
+    for i, (g, cands) in enumerate(zip(graphs, cands_lists)):
+        if not cands:
+            continue
+        cap = np.asarray(separator_caps(g, eps), np.float32)
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(seeds[i]),
+                                           len(cands)))
+        for j, c in enumerate(cands):
+            lab = np.zeros(n_pad, dtype=np.int32)
+            lab[:g.n] = c
+            rows_g.append(coos[i])
+            rows_lab.append(lab)
+            rows_cap.append(cap)
+            rows_key.append(keys[j])
+            rows_force.append(not separator_is_feasible(g, c, eps))
+            owner.append((i, j))
+    if not rows_g:
+        return [[] for _ in graphs]
+    from repro.core import multilevel as ML
+    from repro.core.refine import batch_bucket
+    b = len(rows_g)
+    b_pad = batch_bucket(b, 1)
+    ML.note_bucket_pad(b_pad - b)
+    ML.note_program("sepmulti", n_pad, e_pad, rounds, b_pad, False)
+    while len(rows_g) < b_pad:        # pad rows repeat row 0 (inert)
+        rows_g.append(rows_g[0])
+        rows_lab.append(rows_lab[0])
+        rows_cap.append(rows_cap[0])
+        rows_key.append(rows_key[0])
+        rows_force.append(False)
+    import jax.tree_util as jtu
+    gs = jtu.tree_map(lambda *xs: jnp.stack(xs), *rows_g)
+    outs, _ = _sep_refine_scan_multi(
+        gs, jnp.asarray(np.stack(rows_lab)),
+        jnp.asarray(np.stack(rows_cap)),
+        jnp.asarray(np.stack(rows_key)),
+        jnp.asarray(np.asarray(rows_force)), rounds, use_kernel=False)
+    outs = np.asarray(outs, dtype=np.int64)
+    result: List[List[np.ndarray]] = [[] for _ in graphs]
+    for row, (i, j) in enumerate(owner):
+        g, c = graphs[i], cands_lists[i][j]
+        out = outs[row][:g.n]
+        # same per-candidate paranoia as refine_separator_batch
+        if (separator_weight(g, out) <= separator_weight(g, c)
+                or not separator_is_feasible(g, c, eps)):
+            result[i].append(out)
+        else:
+            result[i].append(np.asarray(c, dtype=np.int64))
     return result
 
 

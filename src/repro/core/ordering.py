@@ -179,19 +179,87 @@ def _nested_dissection(g: Graph, ids: np.ndarray, out: list, seed: int,
     out.extend(ids[np.flatnonzero(in_sep)].tolist())
 
 
+class _NDNode:
+    """One nested-dissection subproblem in the wave tree."""
+    __slots__ = ("g", "ids", "seed", "depth", "leaf", "a", "b", "sep_ids")
+
+    def __init__(self, g: Graph, ids: np.ndarray, seed: int, depth: int):
+        self.g, self.ids, self.seed, self.depth = g, ids, seed, depth
+        self.leaf = None
+        self.a = self.b = self.sep_ids = None
+
+
+def _nested_dissection_wave(g: Graph, ids: np.ndarray, out: list, seed: int,
+                            preset: str, min_size: int = 64,
+                            eps: float = 0.2) -> None:
+    """Wave-order nested dissection (DESIGN.md §12): all subproblems at one
+    recursion depth solve their separators in a single batched call
+    (`nodesep_labels_wave`), so same-shape-bucket siblings share one
+    compiled tournament program.  Seeds (2s+1 / 2s+2) and the post-order
+    emit are exactly those of `_nested_dissection`, so the resulting
+    ordering is bit-identical to the sequential recursion."""
+    from repro.core.nodesep.driver import nodesep_labels_wave, split_labels
+    root = _NDNode(g, ids, seed, 0)
+    wave = [root]
+    while wave:
+        solve = []
+        for nd in wave:
+            if nd.g.n <= min_size or nd.depth > 24:
+                nd.leaf = nd.ids[_min_degree_order(nd.g)]
+            else:
+                solve.append(nd)
+        labs = (nodesep_labels_wave([nd.g for nd in solve], eps=eps,
+                                    preset=preset,
+                                    seeds=[nd.seed for nd in solve])
+                if solve else [])
+        wave = []
+        for nd, lab in zip(solve, labs):
+            sep, part = split_labels(lab)
+            in_sep = np.zeros(nd.g.n, dtype=bool)
+            in_sep[sep] = True
+            a_mask = (part == 0) & ~in_sep
+            b_mask = (part == 1) & ~in_sep
+            if not a_mask.any() or not b_mask.any():
+                nd.leaf = nd.ids[_min_degree_order(nd.g)]
+                continue
+            ga, ia = nd.g.subgraph(a_mask)
+            gb, ib = nd.g.subgraph(b_mask)
+            nd.a = _NDNode(ga, nd.ids[ia], nd.seed * 2 + 1, nd.depth + 1)
+            nd.b = _NDNode(gb, nd.ids[ib], nd.seed * 2 + 2, nd.depth + 1)
+            nd.sep_ids = nd.ids[np.flatnonzero(in_sep)]
+            wave.extend((nd.a, nd.b))
+
+    def emit(nd: _NDNode) -> None:          # depth ≤ 25 → recursion is fine
+        if nd.leaf is not None:
+            out.extend(nd.leaf.tolist())
+            return
+        emit(nd.a)
+        emit(nd.b)
+        out.extend(nd.sep_ids.tolist())
+
+    emit(root)
+
+
 def reduced_nd(g: Graph, preset: str = "eco", seed: int = 0,
                reduction_order=(0, 1, 2, 3, 4),
-               eps: float = 0.2) -> np.ndarray:
+               eps: float = 0.2, batch_siblings: bool = True) -> np.ndarray:
     """Returns permutation ``order`` with order[i] = i-th eliminated vertex.
 
     ``eps`` is the separator imbalance threaded through the whole nested
-    dissection recursion.  (The library's `ordering` output array is the
-    inverse permutation — see interface.reduced_nd.)
+    dissection recursion.  ``batch_siblings`` (default) runs the recursion
+    in wave order so same-bucket sibling subproblems share batched device
+    calls; the ordering is identical either way.  (The library's
+    `ordering` output array is the inverse permutation — see
+    interface.reduced_nd.)
     """
     kernel, old_ids, prefix, follow = apply_reductions(g, reduction_order)
     out: list = []
     if kernel.n:
-        _nested_dissection(kernel, old_ids, out, seed, preset, eps=eps)
+        if batch_siblings:
+            _nested_dissection_wave(kernel, old_ids, out, seed, preset,
+                                    eps=eps)
+        else:
+            _nested_dissection(kernel, old_ids, out, seed, preset, eps=eps)
     order = list(prefix)
     seen = set(prefix)
     for v in out:

@@ -36,22 +36,36 @@ def default_use_kernel() -> bool:
 
 # ---------------------------------------------------------------------------
 # batched k-way gain refinement
+#
+# One jitted program per (bucket, k, rounds, batch bucket): the former
+# allow_zero_gain / localized static flags are traced per batch row, and
+# every entry point (single refine, multi-try, tournament) routes through
+# the same vmapped scan — padded to the medium's pow2 batch bucket so
+# hierarchy levels, V-cycles, islands and ND subproblems at the same shape
+# share one compile (DESIGN.md §12).
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "rounds", "allow_zero_gain",
-                                             "localized", "use_kernel"))
 def _refine_scan(g: CooGraph, labels0: jax.Array, cap: jax.Array,
-                 key: jax.Array, k: int, rounds: int,
-                 allow_zero_gain: bool, force_balance,
-                 localized: bool, active0: Optional[jax.Array] = None,
+                 rkeys: jax.Array, nrounds: jax.Array, k: int, rounds: int,
+                 allow_zero_gain, force_balance,
+                 active0: jax.Array,
                  ell: Optional[EllGraph] = None, use_kernel: bool = False):
+    """One candidate's scan body (unjitted; vmapped by `_refine_scan_batch`).
+
+    ``allow_zero_gain`` and ``force_balance`` are traced booleans; the
+    localized-search reach expansion always runs (with ``active0`` all-ones
+    it is the identity, bit-identical to an unmasked scan).  ``rkeys`` holds
+    the per-round PRNG keys (``rounds``, 2) precomputed on the host, and
+    ``nrounds`` (traced) masks trailing rounds to no-ops — a short search
+    (e.g. multi-try's ``rounds//2``) keeps its exact ``split(key, r)`` key
+    sequence while sharing the full-length compiled program.
+    """
     n = g.n_pad
     vw = g.vwgt
     sizes0 = jnp.zeros((k,), jnp.float32).at[labels0].add(vw)
     cut0 = edge_cut_device(g, labels0)
     feas0 = jnp.max(sizes0 - cap) <= 1e-6
     best_cut0 = jnp.where(feas0, cut0, jnp.inf)
-    act0 = active0 if active0 is not None else jnp.ones((n,), bool)
     affinity_fn = None
     if use_kernel and ell is not None:
         from repro.kernels import ops as kops
@@ -60,15 +74,17 @@ def _refine_scan(g: CooGraph, labels0: jax.Array, cap: jax.Array,
 
     def body(carry, key_r):
         labels, sizes, active, best_cut, best_labels, parity = carry
-        new_labels, new_sizes = lp_mod.kway_lp_round(
+        prop_labels, prop_sizes = lp_mod.kway_lp_round(
             g, labels, sizes, cap, key_r, k, parity,
-            active if localized else None, allow_zero_gain, force_balance,
+            active, allow_zero_gain, force_balance,
             affinity_fn=affinity_fn)
-        if localized:
-            moved = new_labels != labels
-            reach = jnp.zeros((n,), bool).at[g.dst].max(
-                moved[g.src] & (g.w > 0))
-            active = active | reach | moved
+        live = parity < nrounds
+        new_labels = jnp.where(live, prop_labels, labels)
+        new_sizes = jnp.where(live, prop_sizes, sizes)
+        moved = new_labels != labels
+        reach = jnp.zeros((n,), bool).at[g.dst].max(
+            moved[g.src] & (g.w > 0))
+        active = active | reach | moved
         cut = edge_cut_device(g, new_labels)
         feas = jnp.max(new_sizes - cap) <= 1e-6
         better = feas & (cut < best_cut)
@@ -77,13 +93,27 @@ def _refine_scan(g: CooGraph, labels0: jax.Array, cap: jax.Array,
         return (new_labels, new_sizes, active, best_cut, best_labels,
                 parity + 1), cut
 
-    keys = jax.random.split(key, rounds)
     (labels, sizes, _, best_cut, best_labels, _), cuts = jax.lax.scan(
-        body, (labels0, sizes0, act0, best_cut0, labels0, jnp.int32(0)), keys)
+        body, (labels0, sizes0, active0, best_cut0, labels0, jnp.int32(0)),
+        rkeys)
     # undo-to-best (KaFFPa semantics): return best feasible if one was seen
     have_best = jnp.isfinite(best_cut)
     out = jnp.where(have_best, best_labels, labels)
     return out, jnp.where(have_best, best_cut, edge_cut_device(g, labels))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rounds", "use_kernel"))
+def _refine_scan_batch(g: CooGraph, labels0: jax.Array, cap: jax.Array,
+                       rkeys: jax.Array, nrounds: jax.Array,
+                       zero_gain: jax.Array, force: jax.Array,
+                       active0: jax.Array, k: int, rounds: int,
+                       ell: Optional[EllGraph] = None,
+                       use_kernel: bool = False):
+    """THE k-way refinement program: everything routes through here."""
+    def one(lab0, rk, nr, z, f, a0):
+        return _refine_scan(g, lab0, cap, rk, nr, k, rounds, z, f, a0,
+                            ell=ell, use_kernel=use_kernel)
+    return jax.vmap(one)(labels0, rkeys, nrounds, zero_gain, force, active0)
 
 
 def _caps_for(g: Graph, k: int, eps: float,
@@ -101,17 +131,71 @@ def _pad_labels(part: np.ndarray, n_pad: int) -> jnp.ndarray:
     return jnp.asarray(lab)
 
 
+def batch_bucket(b: int, batch_floor: int = 1) -> int:
+    """pow2 batch bucket shared by singles and tournaments at a floor."""
+    from repro.core.csr import _pow2_pad
+    return max(_pow2_pad(max(b, 1), 1), _pow2_pad(max(batch_floor, 1), 1))
+
+
+def _pad_rows(arr: np.ndarray, b_pad: int) -> np.ndarray:
+    """Pad the batch dim to ``b_pad`` by repeating row 0 (rows are
+    independent under vmap, so padding rows never change real rows)."""
+    b = arr.shape[0]
+    if b == b_pad:
+        return arr
+    return np.concatenate([arr, np.broadcast_to(arr[:1],
+                                                (b_pad - b,) + arr.shape[1:])])
+
+
+def _round_keys(key, rounds: int, rounds_bucket: int) -> np.ndarray:
+    """Host-side per-round key schedule (``rounds_bucket``, 2): the first
+    ``rounds`` entries are exactly ``split(key, rounds)``; the padding tail
+    feeds masked no-op rounds."""
+    ks = np.asarray(jax.random.split(key, rounds))
+    if rounds < rounds_bucket:
+        ks = np.concatenate(
+            [ks, np.broadcast_to(ks[:1], (rounds_bucket - rounds, 2))])
+    return ks
+
+
+def _run_scan_batch(coo, cap_np, labs, rkeys, nrounds, zero, force, active,
+                    k, rounds_bucket, ell, use_kernel, batch_floor):
+    """Shared batched-entry plumbing: pow2-pad the batch dim, count bucket
+    pads and program-cache hits, run the one jitted program."""
+    from repro.core import multilevel as ML
+    b = labs.shape[0]
+    b_pad = batch_bucket(b, batch_floor)
+    ML.note_bucket_pad(b_pad - b)
+    ML.note_program("kway", coo.n_pad, coo.e_pad, k, rounds_bucket, b_pad,
+                    use_kernel)
+    outs, _ = _refine_scan_batch(
+        coo, jnp.asarray(_pad_rows(labs, b_pad)),
+        jnp.asarray(np.asarray(cap_np, np.float32)),
+        jnp.asarray(_pad_rows(rkeys, b_pad)),
+        jnp.asarray(_pad_rows(np.asarray(nrounds, np.int32), b_pad)),
+        jnp.asarray(_pad_rows(zero, b_pad)),
+        jnp.asarray(_pad_rows(force, b_pad)),
+        jnp.asarray(_pad_rows(active, b_pad)),
+        k, rounds_bucket, ell=ell, use_kernel=use_kernel)
+    return np.asarray(outs, dtype=np.int64)[:b]
+
+
 def refine_kway(g: Graph, part: np.ndarray, k: int, eps: float = 0.03,
                 rounds: int = 12, seed: int = 0,
                 fractions: Optional[np.ndarray] = None,
                 coo: Optional[CooGraph] = None,
                 force_balance: bool = False,
                 use_kernel: Optional[bool] = None,
-                ell: Optional[EllGraph] = None) -> np.ndarray:
+                ell: Optional[EllGraph] = None,
+                batch_floor: int = 1,
+                rounds_bucket: Optional[int] = None) -> np.ndarray:
     """Polish ``part``; never returns a worse feasible cut (undo-to-best).
 
     ``use_kernel=None`` resolves to the backend default (Pallas on TPU, COO
     scatter elsewhere); ``coo``/``ell`` accept cached per-level views.
+    ``batch_floor`` pads the batch dim up to the medium's bucket so this
+    single call reuses the tournament's compiled program; ``rounds_bucket``
+    likewise pads the round schedule (extra rounds are masked no-ops).
     """
     if k <= 1 or g.n == 0:
         return part
@@ -119,41 +203,37 @@ def refine_kway(g: Graph, part: np.ndarray, k: int, eps: float = 0.03,
     coo = coo if coo is not None else to_coo(g)
     if use_kernel and ell is None:
         ell = to_ell(g, row_tile=coo.n_pad)   # same n_pad as the COO view
-    cap = jnp.asarray(_caps_for(g, k, eps, fractions), jnp.float32)
-    labels0 = _pad_labels(part, coo.n_pad)
-    out, _ = _refine_scan(coo, labels0, cap, jax.random.PRNGKey(seed), k,
-                          rounds, allow_zero_gain=False,
-                          force_balance=force_balance, localized=False,
-                          ell=ell, use_kernel=use_kernel)
-    out = np.asarray(out, dtype=np.int64)[:g.n]
+    rb = max(rounds, rounds_bucket or 0)
+    labs = np.zeros((1, coo.n_pad), dtype=np.int32)
+    labs[0, :g.n] = part
+    rkeys = _round_keys(jax.random.PRNGKey(seed), rounds, rb)[None]
+    outs = _run_scan_batch(coo, _caps_for(g, k, eps, fractions), labs, rkeys,
+                           np.asarray([rounds]),
+                           np.zeros(1, bool), np.asarray([force_balance]),
+                           np.ones((1, coo.n_pad), bool), k, rb, ell,
+                           use_kernel, batch_floor)
+    out = outs[0][:g.n]
     # paranoia: keep the better of (in, out) among feasible options
     if edge_cut(g, out) <= edge_cut(g, part) or force_balance:
         return out
     return part
 
 
-@functools.partial(jax.jit, static_argnames=("k", "rounds", "use_kernel"))
-def _refine_scan_batch(g: CooGraph, labels0: jax.Array, cap: jax.Array,
-                       keys: jax.Array, force: jax.Array, k: int, rounds: int,
-                       ell: Optional[EllGraph] = None,
-                       use_kernel: bool = False):
-    def one(lab0, key, f):
-        return _refine_scan(g, lab0, cap, key, k, rounds,
-                            allow_zero_gain=False, force_balance=f,
-                            localized=False, active0=None, ell=ell,
-                            use_kernel=use_kernel)
-    return jax.vmap(one)(labels0, keys, force)
-
-
 def refine_kway_batch(g: Graph, parts: list, k: int, eps: float = 0.03,
                       rounds: int = 12, seed: int = 0,
                       coo: Optional[CooGraph] = None,
                       ell: Optional[EllGraph] = None,
-                      use_kernel: Optional[bool] = None) -> list:
+                      use_kernel: Optional[bool] = None,
+                      keys: Optional[np.ndarray] = None,
+                      batch_floor: int = 1,
+                      rounds_bucket: Optional[int] = None) -> list:
     """Refine several candidate partitions in one vmapped device call.
 
     The initial-partition tournament uses this so all tries share a single
     compile; per-candidate force-balance rides along as a traced scalar.
+    ``keys`` overrides the per-candidate PRNG keys (shape ``(b, 2)``) —
+    the memetic sweep passes per-island keys so each island's trajectory
+    is independent of how many islands are batched together.
     """
     if k <= 1 or g.n == 0 or not parts:
         return [np.asarray(p, dtype=np.int64) for p in parts]
@@ -161,16 +241,21 @@ def refine_kway_batch(g: Graph, parts: list, k: int, eps: float = 0.03,
     coo = coo if coo is not None else to_coo(g)
     if use_kernel and ell is None:
         ell = to_ell(g, row_tile=coo.n_pad)
-    cap = jnp.asarray(_caps_for(g, k, eps), jnp.float32)
+    rb = max(rounds, rounds_bucket or 0)
     labs = np.zeros((len(parts), coo.n_pad), dtype=np.int32)
     for i, p in enumerate(parts):
         labs[i, :g.n] = p
     force = np.asarray([not is_feasible(g, p, k, eps) for p in parts])
-    keys = jax.random.split(jax.random.PRNGKey(seed), len(parts))
-    outs, _ = _refine_scan_batch(coo, jnp.asarray(labs), cap, keys,
-                                 jnp.asarray(force), k, rounds,
-                                 ell=ell, use_kernel=use_kernel)
-    outs = np.asarray(outs, dtype=np.int64)[:, :g.n]
+    if keys is None:
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(seed),
+                                           len(parts)))
+    rkeys = np.stack([_round_keys(kk, rounds, rb) for kk in np.asarray(keys)])
+    outs = _run_scan_batch(coo, _caps_for(g, k, eps), labs, rkeys,
+                           np.full(len(parts), rounds),
+                           np.zeros(len(parts), bool),
+                           force, np.ones((len(parts), coo.n_pad), bool),
+                           k, rb, ell, use_kernel, batch_floor)
+    outs = outs[:, :g.n]
     result = []
     for i, p in enumerate(parts):
         # same per-candidate paranoia as refine_kway
@@ -184,31 +269,37 @@ def refine_kway_batch(g: Graph, parts: list, k: int, eps: float = 0.03,
 def multi_try_refine(g: Graph, part: np.ndarray, k: int, eps: float = 0.03,
                      tries: int = 3, rounds: int = 8, seed: int = 0,
                      seed_frac: float = 0.05,
-                     coo: Optional[CooGraph] = None) -> np.ndarray:
+                     coo: Optional[CooGraph] = None,
+                     batch_floor: int = 1,
+                     rounds_bucket: Optional[int] = None) -> np.ndarray:
     """Multi-try FM analogue: several localized searches from random boundary
     seeds; keeps the best feasible result."""
     if k <= 1 or g.n == 0:
         return part
     coo = coo if coo is not None else to_coo(g)
-    cap = jnp.asarray(_caps_for(g, k, eps), jnp.float32)
+    rb = max(rounds, rounds_bucket or 0)
+    cap_np = _caps_for(g, k, eps)
     best = np.asarray(part, dtype=np.int64)
     best_cut = edge_cut(g, best)
     rng = np.random.default_rng(seed)
     src = g.edge_sources()
     for t in range(tries):
-        cur = _pad_labels(best, coo.n_pad)
+        labs = np.zeros((1, coo.n_pad), dtype=np.int32)
+        labs[0, :g.n] = best
         bnd = np.unique(src[best[src] != best[g.adjncy]])
         if len(bnd) == 0:
             break
         nseed = max(1, int(len(bnd) * seed_frac))
         chosen = rng.choice(bnd, size=nseed, replace=False)
-        active0 = np.zeros(coo.n_pad, dtype=bool)
-        active0[chosen] = True
-        out, _ = _refine_scan(coo, cur, cap,
-                              jax.random.PRNGKey(seed * 997 + t), k, rounds,
-                              allow_zero_gain=True, force_balance=False,
-                              localized=True, active0=jnp.asarray(active0))
-        out = np.asarray(out, dtype=np.int64)[:g.n]
+        active0 = np.zeros((1, coo.n_pad), dtype=bool)
+        active0[0, chosen] = True
+        rkeys = _round_keys(jax.random.PRNGKey(seed * 997 + t),
+                            rounds, rb)[None]
+        outs = _run_scan_batch(coo, cap_np, labs, rkeys,
+                               np.asarray([rounds]),
+                               np.ones(1, bool), np.zeros(1, bool),
+                               active0, k, rb, None, False, batch_floor)
+        out = outs[0][:g.n]
         c = edge_cut(g, out)
         if c < best_cut:
             best, best_cut = out, c

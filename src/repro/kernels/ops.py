@@ -3,6 +3,16 @@
 On TPU the kernels compile natively; on CPU (this container) they run in
 ``interpret=True`` mode — the kernel body executes in Python with the same
 block decomposition, validating tiling and semantics.
+
+Masking contract (DESIGN.md §12): every input dimension may arrive padded
+to its pow2 shape bucket, and tile correctness relies ONLY on weight masks
+— ``wgt == 0`` for ELL slots, ``pin_mask == 0`` for pin slots, ``netw ==
+0`` for padding nets, zero capacity for bucket-padding blocks (k_pad > k).
+Index sentinels (slot id n_pad-1 etc.) are never trusted as masks: a
+padded slot may alias a real row when a dim lands exactly on its bucket.
+Affinity columns for capacity-zero padding blocks are computed but can
+never win a gain comparison, so k-bucketed calls share one tile program
+with the larger-k calls they pad up to.
 """
 from __future__ import annotations
 
