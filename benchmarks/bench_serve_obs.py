@@ -1,0 +1,189 @@
+"""Serve-path telemetry smoke → ``BENCH_serve_obs.json`` (+ Chrome trace).
+
+Three cells:
+
+* ``serve_replay_minicpm`` — a bursty request stream through the
+  continuous batcher twice: bare, and with `ServeTelemetry` recording onto
+  a `Recorder`.  Gates: token streams bit-identical, telemetry overhead
+  bounded (CI enforces ≤ 1.05× + absolute slack), and the per-slot request
+  timeline exports as a Perfetto-loadable Chrome trace
+  (``BENCH_serve_trace.json``) with balanced spans.
+* ``traffic_drift_flip`` — scripted traffic skew: co-activation pairs flip
+  from block-local to stride-residue patterns.  Gates: the drift score
+  crosses the advise threshold, ``serve/repartition_advised`` fires, and
+  repartitioning the snapshotted traffic hypergraph with ``kahypar``
+  strictly beats the stale partition on observed-traffic (λ−1).
+* ``serve_moe_traffic`` — a real MoE serve run (deepseek_v2 reduced) with
+  ``moe.observe_gates`` streaming routing decisions into a
+  `TrafficAccumulator`; the observed window snapshots to a valid
+  `Hypergraph` and partitions.
+
+Invoked by ``python benchmarks/run.py --smoke`` (CI) or directly.
+"""
+from __future__ import annotations
+
+import json
+
+try:
+    from benchmarks.common import run_metadata, timed_call as _timed
+except ImportError:              # direct: python benchmarks/bench_serve_obs.py
+    from common import run_metadata, timed_call as _timed
+
+TRACE_PATH = "BENCH_serve_trace.json"
+
+STREAM = [
+    (0, [1, 2, 3], 6), (0, [4, 5], 5), (0, [6, 7, 8, 9], 6),
+    (2, [2, 3, 4], 4), (4, [5, 6], 6), (4, [7, 8, 9], 5),
+    (7, [1, 9, 2, 8], 4), (9, [3, 3, 3], 5),
+]
+
+
+def _serve_replay() -> dict:
+    import numpy as np                                   # noqa: F401
+    import jax
+    from repro import obs
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    from repro.serve.batching import serve_stream
+
+    cfg = get_config("minicpm_2b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    run = lambda tele=None: serve_stream(                # noqa: E731
+        params, cfg, STREAM, batch_slots=4, max_len=32, telemetry=tele)
+
+    run()                                    # warm the compile caches
+    plain, s_plain = _timed(run)
+
+    rec = obs.Recorder("serve")
+    tele = obs.ServeTelemetry(recorder=rec)
+    traced, s_tele = _timed(run, tele)
+
+    outs_plain = [r.out for r in plain]
+    outs_tele = [r.out for r in traced]
+    assert outs_plain == outs_tele, "telemetry changed served tokens"
+    assert all(r.done for r in traced)
+
+    # balanced per-slot spans → Perfetto renders one row per slot
+    slot_evs = [e for e in rec.events
+                if str(e.get("track", "")).startswith("slot")]
+    n_b = sum(e["ph"] == "B" for e in slot_evs)
+    n_e = sum(e["ph"] == "E" for e in slot_evs)
+    assert n_b == n_e > 0, (n_b, n_e)
+    n_trace = obs.write_chrome_trace([rec], TRACE_PATH, registry_gauges=True)
+
+    snap = tele.snapshot()
+    assert snap["total_requests"] == len(STREAM)
+    assert {"queue_us", "prefill_us", "decode_us", "e2e_us"} \
+        <= set(snap["latency_us"])
+    return {
+        "s_plain": round(s_plain, 3), "s_telemetry": round(s_tele, 3),
+        "overhead_ratio": round(s_tele / max(s_plain, 1e-9), 4),
+        "requests": snap["total_requests"],
+        "tokens": snap["total_tokens"],
+        "latency_us": {k: {q: round(v, 1) for q, v in d.items()}
+                       for k, d in snap["latency_us"].items()},
+        "trace_events": n_trace, "trace_path": TRACE_PATH,
+        "bit_identical": outs_plain == outs_tele,
+    }
+
+
+def _traffic_drift_flip() -> dict:
+    import numpy as np
+    from repro import obs
+    from repro.core.hypergraph import connectivity, kahypar
+    from repro.obs.live import TrafficAccumulator
+
+    n_e, k_parts = 64, 8
+    rng = np.random.default_rng(0)
+    acc = TrafficAccumulator(n_e, decay=0.9)
+
+    def block_pairs(t):                 # phase A: pairs inside 8-blocks
+        g = rng.integers(0, k_parts, t)
+        a, b = rng.integers(0, 8, (2, t))
+        b = (a + 1 + (b % 7)) % 8       # distinct within the block
+        return np.stack([g * 8 + a, g * 8 + b], axis=1)
+
+    def stride_pairs(t):                # phase B: pairs inside residues mod 8
+        r = rng.integers(0, 8, t)
+        a, b = rng.integers(0, 8, (2, t))
+        b = (a + 1 + (b % 7)) % 8
+        return np.stack([r + 8 * a, r + 8 * b], axis=1)
+
+    for _ in range(40):
+        acc.observe(block_pairs(64))
+    acc.set_baseline()
+    hg_base = acc.snapshot()
+    part_stale = kahypar(hg_base, k_parts, 0.03, "eco", seed=0)
+    drift_cal = acc.drift()
+    assert drift_cal < 0.1, drift_cal
+
+    for _ in range(120):                # the skew flips
+        acc.observe(stride_pairs(64))
+    rec = obs.Recorder("drift")
+    drift = acc.drift()
+    advised = acc.advise(rec, threshold=0.3)
+    assert drift > 0.3 and advised, drift
+
+    hg_new = acc.snapshot()
+    km1_stale = connectivity(hg_new, part_stale)
+    part_fresh = kahypar(hg_new, k_parts, 0.03, "eco", seed=0)
+    km1_fresh = connectivity(hg_new, part_fresh)
+    # repartitioning on live traffic must strictly beat the stale layout
+    assert km1_fresh < km1_stale, (km1_fresh, km1_stale)
+    return {
+        "n_items": n_e, "k": k_parts,
+        "drift_calibration": round(drift_cal, 4),
+        "drift_after_flip": round(drift, 4), "advised": bool(advised),
+        "km1_stale": int(km1_stale), "km1_fresh": int(km1_fresh),
+        "traffic_ratio": round(km1_fresh / max(km1_stale, 1), 4),
+    }
+
+
+def _serve_moe_traffic() -> dict:
+    import jax
+    from repro.configs.base import get_config
+    from repro.core.hypergraph import connectivity, kahypar
+    from repro.models import moe
+    from repro.models import transformer as T
+    from repro.obs.live import TrafficAccumulator
+    from repro.serve.batching import serve_requests
+
+    cfg = get_config("deepseek_v2_236b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    acc = TrafficAccumulator(cfg.n_experts, decay=1.0)
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8]]
+    with moe.observe_gates(acc):
+        (reqs, ), s = _timed(lambda: (serve_requests(
+            params, cfg, prompts, batch_slots=2, max_len=16, max_new=3),))
+    assert all(r.done for r in reqs)
+    assert acc.events > 0, "gate observer saw no routing traffic"
+    hg = acc.snapshot()
+    hg.check()
+    part = kahypar(hg, 2, 0.03, "fast", seed=0)
+    return {
+        "model": cfg.name, "experts": cfg.n_experts, "top_k": cfg.top_k,
+        "gate_events": int(acc.events), "nets": int(hg.m),
+        "km1": int(connectivity(hg, part)), "s": round(s, 3),
+    }
+
+
+def collect() -> dict:
+    return {
+        "serve_replay_minicpm": _serve_replay(),
+        "traffic_drift_flip": _traffic_drift_flip(),
+        "serve_moe_traffic": _serve_moe_traffic(),
+    }
+
+
+def main(out_path: str = "BENCH_serve_obs.json") -> dict:
+    report = {"serve_obs": collect(), "meta": run_metadata()}
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    for name, cell in report["serve_obs"].items():
+        print(f"{name}: {cell}", flush=True)
+    print(f"wrote {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -4,10 +4,11 @@ Prints ``name,us_per_call,derived`` CSV rows.  Roofline tables (deliverable
 g) are produced by ``benchmarks/roofline.py`` from the dry-run artifacts.
 
 ``python benchmarks/run.py --smoke`` runs the end-to-end engine benchmark,
-the node-separator benchmark, the distributed-hypergraph smoke and the
-memetic smoke, writing ``BENCH_engine.json``, ``BENCH_nodesep.json``,
-``BENCH_parhyp.json`` and ``BENCH_memetic.json`` (the CI perf-trajectory
-records).
+the node-separator benchmark, the distributed-hypergraph smoke, the
+memetic smoke and the serve-telemetry smoke, writing ``BENCH_engine.json``,
+``BENCH_nodesep.json``, ``BENCH_parhyp.json``, ``BENCH_memetic.json`` and
+``BENCH_serve_obs.json`` (+ ``BENCH_serve_trace.json``, the Perfetto
+serve timeline) — the CI perf-trajectory records.
 """
 from __future__ import annotations
 
@@ -16,7 +17,7 @@ import sys
 
 def smoke() -> None:
     from benchmarks import (bench_engine, bench_memetic, bench_nodesep,
-                            bench_parhyp)
+                            bench_parhyp, bench_serve_obs)
     eng = bench_engine.main()
     # compile-count columns (DESIGN.md §12): per cell, cold-run backend
     # compiles plus the shape-bucket registry's padding/sharing counters
@@ -27,6 +28,7 @@ def smoke() -> None:
     bench_nodesep.main()
     bench_parhyp.main()
     bench_memetic.main()
+    bench_serve_obs.main()
 
 
 def main() -> None:

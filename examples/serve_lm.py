@@ -1,33 +1,51 @@
-"""Serving example (deliverable b): continuous batching over a request queue
-with prefill + decode steps and per-slot cursors.
+"""Serving example (deliverable b): continuous batching over a bursty
+request stream with prefill + decode steps, per-slot cursors and live
+telemetry (DESIGN.md §13).
 
     PYTHONPATH=src python examples/serve_lm.py
+
+Writes ``serve_trace.json`` — open it in https://ui.perfetto.dev to see
+one timeline row per batcher slot (request → prefill/decode spans,
+per-token instants) with queue-depth / tok-per-s counter tracks.
 """
-import time
+import json
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.base import get_config
 from repro.models import transformer as T
-from repro.serve.batching import serve_requests
+from repro.serve.batching import serve_stream
 
 
 def main():
     cfg = get_config("minicpm_2b").reduced()
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(1, cfg.vocab, rng.integers(2, 10)).tolist()
-               for _ in range(9)]
-    t0 = time.time()
-    reqs = serve_requests(params, cfg, prompts, batch_slots=3,
-                          max_len=64, max_new=6)
-    dt = time.time() - t0
-    total_new = sum(len(r.out) for r in reqs)
+    # bursty arrivals: (tick, prompt, max_new)
+    stream = [(int(rng.integers(0, 12)),
+               rng.integers(1, cfg.vocab, rng.integers(2, 10)).tolist(),
+               6)
+              for _ in range(9)]
+
+    rec = obs.Recorder("serve")
+    tele = obs.ServeTelemetry(recorder=rec)
+    reqs = serve_stream(params, cfg, stream, batch_slots=3, max_len=64,
+                        telemetry=tele)
     for r in reqs:
         print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}")
-    print(f"{len(reqs)} requests, {total_new} tokens in {dt:.1f}s "
-          f"({total_new/dt:.1f} tok/s on 1 CPU core, 3 slots)")
+
+    snap = tele.snapshot()
+    lat = {k: round(v["p50"], 1) for k, v in snap["latency_us"].items()}
+    print(f"{snap['total_requests']} requests, {snap['total_tokens']} "
+          f"tokens in {snap['steps']} decode steps")
+    print(f"p50 latency (us): {json.dumps(lat)}")
+    print(f"throughput: {snap['tok_per_s_window']:.1f} tok/s (window), "
+          f"{snap['tok_per_s_ewma']:.1f} tok/s (ewma)")
+    n = obs.write_chrome_trace(rec, "serve_trace.json",
+                               registry_gauges=True)
+    print(f"wrote serve_trace.json ({n} events) — open in ui.perfetto.dev")
 
 
 if __name__ == "__main__":

@@ -137,6 +137,50 @@ class Hypergraph:
         return Hypergraph(vind=vind, vedges=vedges, eptr=eptr, eind=eind,
                           vwgt=vw, ewgt=ew)
 
+    @staticmethod
+    def from_coactivation(counts: np.ndarray,
+                          load: Optional[np.ndarray] = None,
+                          sets: Optional[dict] = None,
+                          min_weight: float = 0.5) -> "Hypergraph":
+        """Snapshot constructor for observed-traffic hypergraphs
+        (``obs.live.TrafficAccumulator``, DESIGN.md §13).
+
+        ``counts`` is an (n, n) co-activation weight matrix (only the
+        strict upper triangle of ``counts`` is read — symmetrise first if
+        both directions carry weight): every entry ≥ ``min_weight``
+        becomes a 2-pin net with the rounded weight.  ``sets`` optionally
+        maps pin tuples (KV co-access sets, cardinality ≥ 2) to weights,
+        appended as genuine multi-pin nets.  ``load`` becomes the vertex
+        weights (rounded, floored at 1) so (λ−1) partitioning balances
+        observed item load while minimising replication traffic.
+        """
+        counts = np.asarray(counts, dtype=np.float64)
+        n = counts.shape[0]
+        u, v = np.triu_indices(n, 1)
+        w = counts[u, v]
+        keep = w >= min_weight
+        u, v, w = u[keep], v[keep], np.rint(w[keep]).astype(np.int64)
+        pins = np.empty(2 * len(u), dtype=np.int64)
+        pins[0::2], pins[1::2] = u, v
+        eptr = np.arange(0, 2 * len(u) + 1, 2, dtype=np.int64).tolist()
+        eind = pins.tolist()
+        ewgt = np.maximum(w, 1).tolist()
+        if sets:
+            for key in sorted(sets):
+                sw = sets[key]
+                if len(key) < 2 or sw < min_weight:
+                    continue
+                eind.extend(int(x) for x in key)
+                eptr.append(len(eind))
+                ewgt.append(max(int(round(sw)), 1))
+        vwgt = None
+        if load is not None:
+            vwgt = np.maximum(np.rint(np.asarray(load)), 1).astype(np.int64)
+        return Hypergraph.from_arrays(n, np.asarray(eptr, dtype=np.int64),
+                                      np.asarray(eind, dtype=np.int64),
+                                      ewgt=np.asarray(ewgt, dtype=np.int64),
+                                      vwgt=vwgt)
+
     # -- checker -----------------------------------------------------------
     def check(self, raise_on_error: bool = True) -> list:
         """Validate all structural invariants (mirrors ``Graph.check``)."""

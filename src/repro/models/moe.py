@@ -13,6 +13,7 @@ applies it to the weight stacks, minimizing cross-shard all-to-all traffic.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional
 
 import numpy as np
@@ -25,6 +26,51 @@ from repro.models.layers import normal
 def _buffers(x):
     from repro.models import shardings as SH
     return SH.constrain_moe_buffers(x)
+
+
+# ---------------------------------------------------------------------------
+# gate observation (serve-path telemetry, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+#: When set, every ``moe_ffn`` forward reports its routed expert indices
+#: (host numpy, shape (..., k)) — the live signal `obs.live`'s
+#: `TrafficAccumulator` folds into the traffic hypergraph.
+_gate_observer = None
+
+
+def _dispatch_gates(gate_idx) -> None:
+    fn = _gate_observer
+    if fn is not None:
+        fn(np.asarray(gate_idx))
+
+
+def _emit_gates(gate_idx) -> None:
+    """Tap the routing decision.  With no observer installed at trace time
+    this is a pure no-op (nothing is staged into the computation); with
+    one installed, a `jax.debug.callback` ships the indices to the host.
+    The runtime double-check in `_dispatch_gates` makes *clearing* the
+    observer effective even for already-compiled programs; *installing*
+    one only affects computations traced afterwards (e.g. a fresh
+    `ContinuousBatcher`, whose jitted steps are per-instance)."""
+    if _gate_observer is not None:
+        jax.debug.callback(_dispatch_gates, gate_idx)
+
+
+@contextlib.contextmanager
+def observe_gates(sink):
+    """Install a gate observer for the duration of the context.
+
+    ``sink`` is either a callable taking an (..., k) int array or an
+    object with an ``observe`` method (`obs.live.TrafficAccumulator`).
+    """
+    global _gate_observer
+    fn = sink.observe if hasattr(sink, "observe") else sink
+    prev = _gate_observer
+    _gate_observer = fn
+    try:
+        yield sink
+    finally:
+        _gate_observer = prev
 
 
 def init_moe(key, cfg, dtype):
@@ -66,6 +112,7 @@ def moe_ffn(params, x, cfg):
     logits = (xt @ params["router"]).astype(jnp.float32)        # (T,E)
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, gate_idx = jax.lax.top_k(probs, k)                # (T,k)
+    _emit_gates(gate_idx)
     gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
     cap = max(1, int(np.ceil(t * k * cfg.capacity_factor / e)))
     if t >= 4096:       # shardability: capacity divisible by (pod,data)
@@ -111,7 +158,9 @@ def moe_ffn_a2a(params, x, cfg):
     Requires an active mesh with E % model == 0; falls back to moe_ffn
     otherwise (CPU tests).  Tokens stay sharded (pod, data)×batch and
     model×sequence exactly like the residual stream, so entering/leaving the
-    shard_map needs no resharding.
+    shard_map needs no resharding.  Gate observation (`observe_gates`)
+    covers only the fallback path — callbacks inside the shard_map body
+    would serialise the all-to-all.
     """
     from repro.models import shardings as SH
     from repro.compat import shard_map

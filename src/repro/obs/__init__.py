@@ -23,6 +23,9 @@ from __future__ import annotations
 
 import contextlib
 
+from repro.obs.live import (NULL_TELEMETRY, EwmaRate, QuantileSketch,
+                            ServeTelemetry, TrafficAccumulator,
+                            WindowedCounter)
 from repro.obs.recorder import NULL, NullRecorder, Recorder
 from repro.obs.registry import (CounterRegistry, install_jax_compile_listener,
                                 metrics)
@@ -33,6 +36,8 @@ __all__ = [
     "NULL", "NullRecorder", "Recorder", "CounterRegistry", "metrics",
     "install_jax_compile_listener", "chrome_trace", "read_jsonl",
     "write_chrome_trace", "write_jsonl", "current", "use",
+    "NULL_TELEMETRY", "EwmaRate", "QuantileSketch", "ServeTelemetry",
+    "TrafficAccumulator", "WindowedCounter",
 ]
 
 _current = NULL

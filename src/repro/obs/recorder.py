@@ -66,6 +66,15 @@ class NullRecorder:
     def point(self, series: str, **values) -> None:
         pass
 
+    def begin(self, name: str, track=None, **attrs) -> None:
+        pass
+
+    def end(self, name: str, track=None) -> None:
+        pass
+
+    def instant(self, name: str, track=None, **attrs) -> None:
+        pass
+
 
 #: The shared disabled recorder (also the default ambient recorder).
 NULL = NullRecorder()
@@ -186,6 +195,41 @@ class Recorder:
             self.trajectories.setdefault(series, []).append(row)
         self._emit({"ph": "P", "name": series, "ts": self._now_us(),
                     "tid": threading.get_ident(), "values": row})
+
+    # -- explicit-track events (serve tracing, DESIGN.md §13) ---------------
+    # Unlike ``span``, these do not ride the per-thread nesting stack: the
+    # caller owns the track (a named Chrome/Perfetto row, e.g. one per serve
+    # slot) and guarantees B/E matching.  A request's lifetime can then span
+    # many host calls (enqueue → slot-assign → decode ticks → finish)
+    # without ever holding a Python context manager open.
+
+    def begin(self, name: str, track=None, **attrs) -> None:
+        """Open an event on an explicitly named track."""
+        ev = {"ph": "B", "name": name, "ts": self._now_us(),
+              "tid": threading.get_ident()}
+        if track is not None:
+            ev["track"] = str(track)
+        if attrs:
+            ev["args"] = attrs
+        self._emit(ev)
+
+    def end(self, name: str, track=None) -> None:
+        """Close the matching ``begin`` on the same track."""
+        ev = {"ph": "E", "name": name, "ts": self._now_us(),
+              "tid": threading.get_ident()}
+        if track is not None:
+            ev["track"] = str(track)
+        self._emit(ev)
+
+    def instant(self, name: str, track=None, **attrs) -> None:
+        """A zero-duration marker (Chrome "i" instant event)."""
+        ev = {"ph": "I", "name": name, "ts": self._now_us(),
+              "tid": threading.get_ident()}
+        if track is not None:
+            ev["track"] = str(track)
+        if attrs:
+            ev["args"] = attrs
+        self._emit(ev)
 
     def counters(self) -> Dict[str, float]:
         """Counter deltas since this recorder was created."""

@@ -5,7 +5,9 @@ header line per recorder followed by its events (each stamped with the
 recorder name), append-merged across recorders.  ``chrome_trace`` turns
 the same events into the Chrome trace-event JSON that Perfetto
 (https://ui.perfetto.dev) opens directly: spans as matched B/E duration
-events, counters and trajectory values as "C" counter tracks.
+events, counters / gauges / trajectory points as "C" counter tracks,
+explicit-track events (serve slots, the request queue) as named threads
+via "M" thread_name metadata, and instants as "i" events.
 """
 from __future__ import annotations
 
@@ -16,6 +18,10 @@ from typing import Any, Dict, Iterable, List, Tuple, Union
 from repro.obs.recorder import Recorder
 
 Recorders = Union[Recorder, Iterable[Recorder]]
+
+#: tid block where named tracks live — far above any real thread index the
+#: remapper below assigns, so the two can never collide.
+_TRACK_TID0 = 1_000_000
 
 
 def _as_list(recs: Recorders) -> List[Recorder]:
@@ -42,36 +48,76 @@ def write_jsonl(recs: Recorders, path: str) -> int:
 
 def read_jsonl(path: str) -> Tuple[List[Dict[str, Any]],
                                    List[Dict[str, Any]]]:
-    """Read a journal back → (recorder header dicts, event dicts)."""
+    """Read a journal back → (recorder header dicts, event dicts).
+
+    Crash-safe: a truncated trailing line (the partial write an interrupted
+    run leaves behind) is dropped and the valid prefix returned.  Corrupt
+    lines *before* the end of the file still raise — that is data loss, not
+    an interrupted append.
+    """
     headers, events = [], []
     with open(path) as f:
-        for line in f:
-            line = line.strip()
-            if not line:
-                continue
+        lines = f.readlines()
+    last = len(lines) - 1
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
             obj = json.loads(line)
-            (headers if obj.get("kind") == "recorder" else events).append(obj)
+        except json.JSONDecodeError:
+            if i == last:
+                break               # interrupted final append: keep prefix
+            raise
+        (headers if obj.get("kind") == "recorder" else events).append(obj)
     return headers, events
 
 
-def chrome_trace(recs: Recorders) -> Dict[str, Any]:
+def chrome_trace(recs: Recorders,
+                 registry_gauges: bool = False) -> Dict[str, Any]:
     """Chrome trace-event JSON (the ``traceEvents`` array format).
 
-    Spans become matched B/E duration events on (pid, tid) tracks,
-    counter increments and trajectory points become "C" counter events —
-    all directly viewable in Perfetto or chrome://tracing.
+    Spans become matched B/E duration events on (pid, tid) tracks; counter
+    increments, gauges and trajectory points become "C" counter events;
+    instants become "i" events.  Events carrying a ``track`` name (the
+    serve path's per-slot request timelines) are mapped onto dedicated
+    tids with "M" thread_name metadata, so Perfetto shows them as named
+    rows ("slot 0", "queue", …).  ``registry_gauges=True`` additionally
+    snapshots the process-wide ``obs.metrics`` gauges as one final counter
+    sample per gauge — quality/queue-depth curves land next to the spans.
     """
     pid = os.getpid()
     tes: List[Dict[str, Any]] = []
+    tracks: Dict[str, int] = {}
+    last_ts = 0.0
+
+    def _tid(ev) -> int:
+        track = ev.get("track")
+        if track is None:
+            return ev.get("tid", 0)
+        if track not in tracks:
+            tid = _TRACK_TID0 + len(tracks)
+            tracks[track] = tid
+            tes.append({"name": "thread_name", "ph": "M", "pid": pid,
+                        "tid": tid, "args": {"name": track}})
+        return tracks[track]
+
     for rec in _as_list(recs):
         with rec._lock:
             events = list(rec.events)
         totals: Dict[str, float] = {}
         for ev in events:
-            tid = ev.get("tid", 0)
+            last_ts = max(last_ts, ev.get("ts", 0.0))
             if ev["ph"] in ("B", "E"):
                 out = {"name": ev["name"], "ph": ev["ph"], "ts": ev["ts"],
-                       "pid": pid, "tid": tid, "cat": rec.name}
+                       "pid": pid, "tid": _tid(ev), "cat": rec.name}
+                if "args" in ev:
+                    out["args"] = ev["args"]
+                tes.append(out)
+            elif ev["ph"] == "I":
+                out = {"name": ev["name"], "ph": "i", "ts": ev["ts"],
+                       "pid": pid, "tid": _tid(ev), "cat": rec.name,
+                       "s": "t"}
                 if "args" in ev:
                     out["args"] = ev["args"]
                 tes.append(out)
@@ -91,12 +137,19 @@ def chrome_trace(recs: Recorders) -> Dict[str, Any]:
                     tes.append({"name": ev["name"], "ph": "C",
                                 "ts": ev["ts"], "pid": pid, "tid": 0,
                                 "cat": rec.name, "args": vals})
+    if registry_gauges:
+        from repro.obs.registry import metrics
+        for name, value in sorted(metrics.gauges().items()):
+            tes.append({"name": name, "ph": "C", "ts": last_ts,
+                        "pid": pid, "tid": 0, "cat": "registry",
+                        "args": {"value": value}})
     return {"traceEvents": tes, "displayTimeUnit": "ms"}
 
 
-def write_chrome_trace(recs: Recorders, path: str) -> int:
+def write_chrome_trace(recs: Recorders, path: str,
+                       registry_gauges: bool = False) -> int:
     """Write the Chrome trace JSON; returns the number of trace events."""
-    trace = chrome_trace(recs)
+    trace = chrome_trace(recs, registry_gauges=registry_gauges)
     with open(path, "w") as f:
         json.dump(trace, f)
     return len(trace["traceEvents"])

@@ -1,14 +1,31 @@
-"""Continuous batching for the serving example: a fixed pool of B slots,
-each slot owns a position cursor inside the shared (stacked) KV caches;
-finished requests free their slot, queued requests prefill into free slots.
+"""Continuous batching for the serving stack: a fixed pool of B slots, each
+slot owns a position cursor inside the shared (stacked) KV caches; finished
+requests free their slot, queued requests prefill into free slots.
 
-(The single-sequence prefill into slot ``b`` uses a per-slot cache view —
-batched prefill of heterogeneous lengths is padded to the slot max.)
+Slot isolation is exact (pinned by tests/test_train_serve.py):
+
+  * Prefill runs on a **per-slot cache view** — ``caches[:, s:s+1]`` is
+    sliced out, the prompt decoded token-by-token into it (one compiled
+    (1, 1) shape regardless of prompt length), and the view written back.
+    Other slots' cache entries are never touched.
+  * Decode is a **vmapped per-slot step**: every slot attends and writes
+    at its *own* position cursor (per-slot RoPE positions, per-slot
+    causal mask), so heterogeneous prompt lengths coexist bit-exactly
+    with single-request decoding.  Free slots decode inertly at cursor 0;
+    whatever they write is overwritten by the next prefill before it can
+    ever be attended (positions beyond a request's cursor are masked, and
+    every position ≤ the cursor is freshly written by that request).
+
+Telemetry is opt-in via ``telemetry=`` (`obs.live.ServeTelemetry`); the
+default `NULL_TELEMETRY` makes every hook a no-op — no clock reads, no
+allocations, bit-identical outputs.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+import functools
+import time
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -16,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
+from repro.obs.live import NULL_TELEMETRY
 from repro.serve.serve_step import decode_step, greedy_token
 
 
@@ -28,85 +46,166 @@ class Request:
     done: bool = False
 
 
+# module-level jitted steps (cfg is a frozen dataclass → static arg), so
+# every batcher instance for the same config shares one compile cache
+@functools.partial(jax.jit, static_argnums=1)
+def _step1(params, cfg, tok, caches, pos):
+    """Single-slot decode at fixed (1, 1) shape — the prefill token loop."""
+    return decode_step(params, cfg, tok, caches, pos)
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _decode_slots(params, cfg, toks, pos, caches):
+    """Per-slot decode: each lane re-adds its batch dim, runs one token at
+    its OWN cursor, and strips the dim again so the stacked caches keep
+    their (layers, B, ...) layout."""
+    def one(tok, p, cache):
+        cache1 = jax.tree.map(lambda c: c[:, None], cache)
+        lg, new = decode_step(params, cfg, tok[None, None], cache1, p)
+        return lg[0], jax.tree.map(lambda c: c[:, 0], new)
+
+    return jax.vmap(one, in_axes=(0, 0, 1), out_axes=(0, 1))(
+        toks, pos, caches)
+
+
 class ContinuousBatcher:
     def __init__(self, params, cfg: ArchConfig, batch_slots: int,
-                 max_len: int):
+                 max_len: int, telemetry=None):
         self.params = params
         self.cfg = cfg
         self.b = batch_slots
         self.max_len = max_len
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
         self.caches = T.init_caches(cfg, batch_slots, max_len)
         self.pos = np.zeros(batch_slots, dtype=np.int64)
         self.budget = np.zeros(batch_slots, dtype=np.int64)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.last_tok = np.zeros((batch_slots, 1), dtype=np.int32)
-        self._decode = jax.jit(
-            lambda p, tok, caches, pos: self._decode_impl(p, tok, caches, pos))
 
-    def _decode_impl(self, params, tok, caches, pos):
-        # per-slot positions: run the stacked decode with per-slot masks by
-        # taking the max position (safe upper bound) and masking per slot in
-        # the attention via cache contents; positions differ per slot, so we
-        # decode each slot against its own cursor using vmap over slots is
-        # costly — instead we use the shared-step approximation: all slots
-        # share the same step index (the cache is padded).  For exactness we
-        # pass per-slot pos through the RoPE positions.
-        logits, caches = T.forward(params, self.cfg, tok, caches=caches,
-                                   cache_pos=pos)
-        return logits[:, -1], caches
+    # -- slot cache views ----------------------------------------------------
+    def _slot_view(self, s: int):
+        return jax.tree.map(lambda c: c[:, s:s + 1], self.caches)
+
+    def _write_slot(self, s: int, view) -> None:
+        self.caches = jax.tree.map(
+            lambda full, piece: full.at[:, s:s + 1].set(
+                piece.astype(full.dtype)), self.caches, view)
+
+    def _free_slot(self, s: int) -> None:
+        self.slot_req[s] = None
+        self.pos[s] = 0
+        self.budget[s] = 0
+        self.last_tok[s, 0] = 0
+
+    def active_slots(self) -> List[int]:
+        return [s for s in range(self.b) if self.slot_req[s] is not None]
 
     def add(self, req: Request) -> bool:
+        """Place ``req`` into a free slot (prefill); False when all busy."""
+        if len(req.prompt) > self.max_len - 1:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} exceeds cache capacity "
+                f"{self.max_len - 1}")
+        if req.max_new <= 0 or len(req.prompt) == 0:
+            req.done = True             # nothing to generate: never slotted
+            return True
+        tele = self.telemetry
         for s in range(self.b):
             if self.slot_req[s] is None:
-                self.slot_req[s] = req
-                # prefill this slot: simple loop decode over the prompt
-                # (slot-local prefill keeps the example dependency-free)
+                tele.started(req.rid, s, len(req.prompt),
+                             active=len(self.active_slots()) + 1)
+                view = self._slot_view(s)
+                lg = None
                 for t, tok in enumerate(req.prompt):
-                    lg, self.caches = decode_step(
+                    lg, view = _step1(
                         self.params, self.cfg,
-                        jnp.asarray(np.full((self.b, 1), tok, np.int32)),
-                        self.caches, jnp.int32(t))
+                        jnp.full((1, 1), int(tok), jnp.int32), view,
+                        jnp.int32(t))
+                self._write_slot(s, view)
+                tele.prefilled(req.rid, s, len(req.prompt))
+                first = int(np.asarray(lg[0]).argmax())
+                req.out.append(first)
                 self.pos[s] = len(req.prompt)
-                self.budget[s] = req.max_new
-                self.last_tok[s, 0] = int(np.asarray(lg[s]).argmax())
+                if req.max_new == 1 or self.pos[s] >= self.max_len - 1:
+                    req.done = True     # prefill token was the whole budget
+                    tele.finished(req.rid, s, len(req.out))
+                    return True
+                self.slot_req[s] = req
+                self.budget[s] = req.max_new - 1
+                self.last_tok[s, 0] = first
                 return True
         return False
 
-    def step(self):
-        """One decode step for every active slot."""
-        active = [s for s in range(self.b) if self.slot_req[s] is not None]
+    def step(self, queue_depth: int = 0) -> List[Request]:
+        """One decode step for every active slot; returns finished requests."""
+        active = self.active_slots()
         if not active:
             return []
-        pos = int(self.pos[active].max())
-        logits, self.caches = decode_step(
-            self.params, self.cfg, jnp.asarray(self.last_tok),
-            self.caches, jnp.int32(pos))
+        tele = self.telemetry
+        t0 = time.perf_counter() if tele.enabled else 0.0
+        logits, self.caches = _decode_slots(
+            self.params, self.cfg, jnp.asarray(self.last_tok[:, 0]),
+            jnp.asarray(self.pos, dtype=jnp.int32), self.caches)
         nxt = np.asarray(greedy_token(logits))
         finished = []
         for s in active:
             req = self.slot_req[s]
-            req.out.append(int(nxt[s]))
-            self.last_tok[s, 0] = int(nxt[s])
+            tok = int(nxt[s])
+            req.out.append(tok)
+            self.last_tok[s, 0] = tok
             self.pos[s] += 1
             self.budget[s] -= 1
+            tele.tick(req.rid, s, tok)
             if self.budget[s] <= 0 or self.pos[s] >= self.max_len - 1:
                 req.done = True
                 finished.append(req)
-                self.slot_req[s] = None
+                tele.finished(req.rid, s, len(req.out))
+                self._free_slot(s)
+        if tele.enabled:
+            tele.step(len(active), len(self.active_slots()),
+                      queue_depth=queue_depth,
+                      step_s=time.perf_counter() - t0)
         return finished
+
+
+def serve_stream(params, cfg: ArchConfig,
+                 stream: Sequence[Tuple[int, Sequence[int], int]],
+                 batch_slots: int = 4, max_len: int = 128,
+                 telemetry=None) -> List[Request]:
+    """Replay a request stream through the batcher until drained.
+
+    ``stream``: (arrival_tick, prompt, max_new) triples; a tick is one
+    batched decode step, so bursty traces interleave arrivals with decode
+    progress exactly like a live server.  Returns the Requests in stream
+    order.
+    """
+    tele = telemetry if telemetry is not None else NULL_TELEMETRY
+    reqs = [Request(i, np.asarray(p, np.int32), mn)
+            for i, (_, p, mn) in enumerate(stream)]
+    arrivals = sorted(range(len(reqs)), key=lambda i: (stream[i][0], i))
+    batcher = ContinuousBatcher(params, cfg, batch_slots, max_len,
+                                telemetry=tele)
+    queue: List[Request] = []
+    tick = 0
+    i = 0
+    while i < len(arrivals) or queue or batcher.active_slots():
+        while i < len(arrivals) and stream[arrivals[i]][0] <= tick:
+            req = reqs[arrivals[i]]
+            queue.append(req)
+            tele.enqueued(req.rid, len(queue))
+            i += 1
+        while queue and batcher.add(queue[0]):
+            queue.pop(0)
+        batcher.step(queue_depth=len(queue))
+        tick += 1
+    return reqs
 
 
 def serve_requests(params, cfg: ArchConfig, prompts: list,
                    batch_slots: int = 4, max_len: int = 128,
-                   max_new: int = 8) -> list:
+                   max_new: int = 8, telemetry=None) -> list:
     """Drive the batcher until every request completes; returns Requests."""
-    todo = [Request(i, np.asarray(p, np.int32), max_new)
-            for i, p in enumerate(prompts)]
-    batcher = ContinuousBatcher(params, cfg, batch_slots, max_len)
-    done: list = []
-    queue = list(todo)
-    while queue or any(r is not None for r in batcher.slot_req):
-        while queue and batcher.add(queue[0]):
-            queue.pop(0)
-        done.extend(batcher.step())
-    return todo
+    return serve_stream(params, cfg,
+                        [(0, p, max_new) for p in prompts],
+                        batch_slots=batch_slots, max_len=max_len,
+                        telemetry=telemetry)

@@ -1,5 +1,11 @@
 """Serving steps: prefill + decode (the functions dryrun.py lowers for the
-``prefill_*`` / ``decode_*`` / ``long_*`` cells)."""
+``prefill_*`` / ``decode_*`` / ``long_*`` cells).
+
+Both steps emit an ambient-recorder span (`obs.use`) when called eagerly —
+the serve path's Chrome trace shows each prefill/decode dispatch.  Inside a
+jit trace the hook is skipped (it would only time tracing), and with no
+recorder installed the cost is one attribute read on the NULL singleton.
+"""
 from __future__ import annotations
 
 from typing import Optional
@@ -7,8 +13,16 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
+
+
+def _serve_span(rec, name: str, arr, **attrs):
+    """An ambient span unless disabled or mid-trace (``arr`` is probed)."""
+    if rec.enabled and not isinstance(arr, jax.core.Tracer):
+        return rec.span(name, **attrs)
+    return obs.NULL.span(name)
 
 
 def prefill_step(params, cfg: ArchConfig, tokens, caches,
@@ -20,8 +34,10 @@ def prefill_step(params, cfg: ArchConfig, tokens, caches,
         kw["prefix_embeds"] = prefix_embeds
     if enc_frames is not None:
         kw["enc_frames"] = enc_frames
-    logits, caches = T.forward(params, cfg, tokens, caches=caches,
-                               cache_pos=0, remat=remat, **kw)
+    with _serve_span(obs.current(), "serve/prefill_step", tokens,
+                     tokens=int(tokens.shape[0] * tokens.shape[1])):
+        logits, caches = T.forward(params, cfg, tokens, caches=caches,
+                                   cache_pos=0, remat=remat, **kw)
     return logits[:, -1], caches
 
 
@@ -32,8 +48,10 @@ def decode_step(params, cfg: ArchConfig, last_token, caches, pos,
     kw = {}
     if enc_frames is not None:
         kw["enc_frames"] = enc_frames
-    logits, caches = T.forward(params, cfg, last_token, caches=caches,
-                               cache_pos=pos, **kw)
+    with _serve_span(obs.current(), "serve/decode_step", last_token,
+                     batch=int(last_token.shape[0])):
+        logits, caches = T.forward(params, cfg, last_token, caches=caches,
+                                   cache_pos=pos, **kw)
     return logits[:, -1], caches
 
 

@@ -201,3 +201,69 @@ def test_interface_report_kwarg():
     assert cut == edge_cut(g, part)
     assert any(e["name"] == "run" for e in rec.events)
     assert rec.trajectory("cycles")
+
+
+# -- crash-safe journals and counter/track export (serve telemetry PR) ------
+
+def test_read_jsonl_tolerates_truncated_tail(tmp_path):
+    rec = obs.Recorder("crash")
+    with rec.span("a"):
+        rec.count("k", 1)
+    p = str(tmp_path / "j.jsonl")
+    obs.write_jsonl(rec, p)
+    whole_headers, whole_events = obs.read_jsonl(p)
+    raw = open(p, "rb").read()
+    # chop mid-way through the final line (a crashed writer's torn record)
+    open(p, "wb").write(raw[:-7])
+    headers, events = obs.read_jsonl(p)
+    assert headers == whole_headers
+    assert events == whole_events[:-1]
+    # corruption in the *middle* is a real error, not silently skipped
+    lines = raw.decode().strip().split("\n")
+    lines[1] = lines[1][:-5]
+    open(p, "w").write("\n".join(lines) + "\n")
+    with pytest.raises(json.JSONDecodeError):
+        obs.read_jsonl(p)
+
+
+def test_chrome_trace_counters_points_and_gauges(tmp_path):
+    rec = obs.Recorder("ct")
+    with rec.span("work"):
+        rec.count("widgets", 3)
+        rec.gauge("temp", 7.5)
+        rec.point("cycles", cycle=0, objective=42.0)
+    trace = obs.chrome_trace([rec], registry_gauges=True)["traceEvents"]
+    cs = [e for e in trace if e["ph"] == "C"]
+    assert any(e["name"] == "widgets" and e["args"] == {"value": 3}
+               for e in cs)
+    assert any(e["name"] == "temp" for e in cs)
+    # point() trajectories become multi-series counter tracks
+    assert any(e["name"] == "cycles" and e["args"].get("objective") == 42.0
+               for e in cs)
+    # registry gauges appended as a final snapshot
+    assert any(e.get("cat") == "registry" for e in cs)
+    # without the flag, no registry snapshot rides along
+    plain = obs.chrome_trace([rec])["traceEvents"]
+    assert not any(e.get("cat") == "registry" for e in plain)
+
+
+def test_chrome_trace_named_tracks_and_instants():
+    rec = obs.Recorder("tracks")
+    rec.begin("req 0", track="slot 0", rid=0)
+    rec.instant("tok", track="slot 0", token=5)
+    rec.end("req 0", track="slot 0")
+    rec.instant("enqueue", track="queue", rid=1)
+    trace = obs.chrome_trace([rec])["traceEvents"]
+    meta = {e["args"]["name"]: e["tid"] for e in trace
+            if e.get("name") == "thread_name"}
+    assert {"slot 0", "queue"} <= set(meta)
+    assert meta["slot 0"] != meta["queue"]
+    span = [e for e in trace if e.get("name") == "req 0"]
+    assert [e["ph"] for e in span] == ["B", "E"]
+    assert all(e["tid"] == meta["slot 0"] for e in span)
+    inst = [e for e in trace if e["ph"] == "i"]
+    assert {e["name"] for e in inst} == {"tok", "enqueue"}
+    # NullRecorder accepts the same surface
+    obs.NULL.begin("x", track="t")
+    obs.NULL.instant("x", track="t")
+    obs.NULL.end("x", track="t")

@@ -139,3 +139,85 @@ def test_prefill_then_decode():
         [tokens, jnp.argmax(last, -1)[:, None].astype(jnp.int32)], axis=1))
     np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]),
                                rtol=2e-3, atol=2e-3)
+
+
+# -- continuous-batching slot accounting (regression: prefill once leaked
+# -- into every slot's cache, and decode shared one position cursor) --------
+
+@pytest.fixture(scope="module")
+def serve_params():
+    return T.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _solo(params, prompt, max_new, max_len=32):
+    """Reference: the same request served alone (one slot, empty pool)."""
+    from repro.serve.batching import serve_requests
+    (req,) = serve_requests(params, CFG, [prompt], batch_slots=1,
+                            max_len=max_len, max_new=max_new)
+    return req.out
+
+
+def test_batcher_slot_isolation_matches_solo(serve_params):
+    # heterogeneous prompt lengths decoding concurrently must produce the
+    # same tokens as each request alone — pins per-slot cache views and
+    # per-slot position cursors
+    from repro.serve.batching import serve_requests
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [1], [2, 3, 4, 5, 6]]
+    refs = [_solo(serve_params, p, 6) for p in prompts]
+    reqs = serve_requests(serve_params, CFG, prompts, batch_slots=3,
+                          max_len=32, max_new=6)
+    assert all(r.done for r in reqs)
+    for r, ref in zip(reqs, refs):
+        assert r.out == ref, (r.rid, r.out, ref)
+
+
+def test_batcher_budget_and_capacity_edges(serve_params):
+    from repro.serve.batching import ContinuousBatcher, Request, \
+        serve_requests
+    # max_new=1: exactly the prefill token, slot never occupied afterwards
+    reqs = serve_requests(serve_params, CFG, [[1, 2], [3, 4]],
+                          batch_slots=2, max_len=32, max_new=1)
+    assert all(r.done and len(r.out) == 1 for r in reqs)
+    # max_new=0: done immediately, nothing generated
+    reqs = serve_requests(serve_params, CFG, [[1, 2]], batch_slots=2,
+                          max_len=32, max_new=0)
+    assert reqs[0].done and reqs[0].out == []
+    # generation stops at cache capacity even with budget left
+    reqs = serve_requests(serve_params, CFG, [list(range(1, 13))],
+                          batch_slots=1, max_len=16, max_new=50)
+    assert reqs[0].done and len(reqs[0].out) == 16 - 12
+    # a prompt that cannot fit is rejected loudly, not silently clobbered
+    b = ContinuousBatcher(serve_params, CFG, 1, max_len=8)
+    with pytest.raises(ValueError):
+        b.add(Request(0, np.arange(1, 10, dtype=np.int32), max_new=4))
+
+
+def test_batcher_slot_reuse_after_done(serve_params):
+    # 5 requests through 2 slots: later requests re-use slots freed by
+    # earlier ones and must still match their solo outputs
+    from repro.serve.batching import serve_stream
+    stream = [(0, [1, 2, 3], 2), (0, [4, 5], 5), (1, [6, 7, 8], 3),
+              (4, [9, 1], 4), (6, [2, 2, 2, 2], 2)]
+    refs = [_solo(serve_params, p, mn) for _, p, mn in stream]
+    reqs = serve_stream(serve_params, CFG, stream, batch_slots=2,
+                        max_len=32)
+    assert all(r.done for r in reqs)
+    for r, ref in zip(reqs, refs):
+        assert r.out == ref, (r.rid, r.out, ref)
+
+
+def test_batcher_telemetry_output_identical(serve_params):
+    from repro import obs
+    from repro.serve.batching import serve_requests
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9]]
+    plain = serve_requests(serve_params, CFG, prompts, batch_slots=2,
+                           max_len=32, max_new=4)
+    rec = obs.Recorder("serve")
+    tele = obs.ServeTelemetry(recorder=rec)
+    traced = serve_requests(serve_params, CFG, prompts, batch_slots=2,
+                            max_len=32, max_new=4, telemetry=tele)
+    assert [r.out for r in traced] == [r.out for r in plain]
+    # every request span on a slot track opened and closed
+    evs = [e for e in rec.events if e.get("track", "").startswith("slot")]
+    assert sum(e["ph"] == "B" for e in evs) == \
+        sum(e["ph"] == "E" for e in evs) > 0
