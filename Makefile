@@ -2,10 +2,17 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test bench bench-smoke example-hypergraph
+.PHONY: verify test analyze bench bench-smoke example-hypergraph
 
 verify:
 	$(PY) -m pytest -x -q
+
+# static analysis gate (DESIGN.md §14): trace every registered entry point,
+# run the four jaxpr checkers + source lints, fail on findings not in the
+# committed baseline
+analyze:
+	$(PY) -m repro.analysis --out analysis_findings.jsonl \
+		--baseline ANALYSIS_BASELINE.json
 
 test:
 	$(PY) -m pytest -q

@@ -1,0 +1,105 @@
+"""`repro.analysis` — jaxpr-level contract checking (DESIGN.md §14).
+
+Four checkers over every registered entry point, traced on canonical
+shape specs (nothing runs on real data; padding checks execute the traced
+jaxpr on tiny instances):
+
+  * **bucket**   — pow2 bucket dims + `note_program` signature hygiene
+  * **padding**  — padding-inertness by self-composition (padding.py)
+  * **spmd**     — shard_map replication dataflow (spmd.py)
+  * **hygiene**  — callbacks in hot scans, f64, weak-type promotions
+
+plus two source lints: **host_sync** (serve path) and **registry**
+(driver coverage).  `python -m repro.analysis` runs everything, writes an
+obs-journal-compatible findings JSONL and gates against
+`ANALYSIS_BASELINE.json`.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro import obs
+from repro.analysis.findings import (CHECKERS, Finding, load_baseline,
+                                     partition_by_baseline,
+                                     write_findings_jsonl)
+from repro.analysis.registry import (DRIVER_ENTRIES, EntryPoint, PaddingSpec,
+                                     default_registry)
+
+__all__ = [
+    "CHECKERS", "DRIVER_ENTRIES", "EntryPoint", "Finding", "PaddingSpec",
+    "analyze", "analyze_entry", "default_registry", "exercise_drivers",
+    "load_baseline", "partition_by_baseline", "write_findings_jsonl",
+]
+
+
+def analyze_entry(entry: EntryPoint) -> List[Finding]:
+    """Trace one entry point and run every checker its tags request."""
+    from repro.analysis import checkers, padding, spmd, tracing
+    try:
+        traced = tracing.trace_entry(entry)
+    except Exception as exc:  # noqa: BLE001 — any trace failure is a finding
+        return [Finding(
+            checker="hygiene", severity="error", entry=entry.name,
+            code="trace-error", location="trace",
+            message=f"{entry.name} failed to trace: "
+                    f"{type(exc).__name__}: {exc}")]
+    out: List[Finding] = []
+    if "bucket" in entry.tags:
+        out.extend(checkers.check_bucket(traced, entry))
+    if "hygiene" in entry.tags:
+        out.extend(checkers.check_hygiene(traced, entry))
+    if "spmd" in entry.tags:
+        out.extend(spmd.check_spmd(traced, entry))
+    if "padding" in entry.tags:
+        try:
+            out.extend(padding.check_padding(traced, entry))
+        except Exception as exc:  # noqa: BLE001
+            out.append(Finding(
+                checker="padding", severity="error", entry=entry.name,
+                code="eval-error", location="eval",
+                message=f"{entry.name} padding self-composition failed to "
+                        f"evaluate: {type(exc).__name__}: {exc}"))
+    return out
+
+
+def exercise_drivers() -> None:
+    """Run tiny end-to-end driver calls so `multilevel.note_program` holds
+    real program signatures for the bucket cross-check (the signatures are
+    recorded per process; a fresh CLI run would otherwise see none)."""
+    from repro.core import interface as I
+    from repro.analysis.registry import _ring_graph, _tiny_hypergraph
+    g = _ring_graph()
+    I.kaffpa(g.n, g.vwgt, g.xadj, g.adjwgt, g.adjncy, 2, 0.1, seed=0,
+             mode=I.FAST)
+    hg = _tiny_hypergraph()
+    I.kahypar(hg.n, hg.m, hg.vwgt, hg.ewgt, hg.eptr, hg.eind, 2, 0.1,
+              seed=0, mode=I.FAST)
+    I.node_separator(g.n, g.vwgt, g.xadj, g.adjwgt, g.adjncy, 2, 0.2,
+                     seed=0, mode=I.FAST)
+
+
+def analyze(entries: Optional[Sequence[str]] = None,
+            registry: Optional[Dict[str, EntryPoint]] = None,
+            lints: bool = True,
+            program_registry: bool = True) -> List[Finding]:
+    """Run every checker; returns findings (counters land in obs.metrics)."""
+    from repro.analysis import checkers, lint
+    registry = default_registry() if registry is None else registry
+    names = sorted(registry) if entries is None else list(entries)
+    findings: List[Finding] = []
+    for name in names:
+        findings.extend(analyze_entry(registry[name]))
+    if program_registry:
+        from repro.core import multilevel as ML
+        findings.extend(
+            checkers.check_program_registry(ML.program_signatures()))
+    if lints:
+        findings.extend(lint.check_host_sync())
+        findings.extend(lint.check_driver_registry())
+    per_checker: Dict[str, int] = {}
+    for f in findings:
+        per_checker[f.checker] = per_checker.get(f.checker, 0) + 1
+    obs.metrics.inc("analysis/violations", len(findings))
+    for c, n in per_checker.items():
+        obs.metrics.inc(f"analysis/{c}", n)
+    return findings

@@ -1,0 +1,74 @@
+"""CLI: ``python -m repro.analysis`` — run all checkers, write findings
+JSONL, gate against the committed baseline.
+
+Exit status 0 when every finding is baselined (or none), 1 when new
+findings exist.  ``--exercise`` (default on) first runs tiny end-to-end
+driver calls so the bucket checker can cross-check real
+`multilevel.note_program` signatures.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from repro import obs
+from repro.analysis import (analyze, default_registry, exercise_drivers,
+                            load_baseline, partition_by_baseline,
+                            write_findings_jsonl)
+from repro.analysis.findings import Finding
+
+
+def _fmt(f: Finding) -> str:
+    return (f"  [{f.severity:7s}] {f.checker:9s} {f.entry or '-':28s} "
+            f"{f.code:26s} {f.location}\n      {f.message}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--out", default="analysis_findings.jsonl",
+                    help="findings JSONL (obs read_jsonl compatible)")
+    ap.add_argument("--baseline", default="ANALYSIS_BASELINE.json")
+    ap.add_argument("--entries", default=None,
+                    help="comma-separated entry names (default: all)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered entry points and exit")
+    ap.add_argument("--no-exercise", action="store_true",
+                    help="skip the tiny driver runs that seed note_program "
+                         "signatures for the bucket cross-check")
+    args = ap.parse_args(argv)
+
+    registry = default_registry()
+    if args.list:
+        for name, e in sorted(registry.items()):
+            print(f"{name:28s} tags={','.join(sorted(e.tags))}"
+                  + (f" drivers={','.join(e.drivers)}" if e.drivers else ""))
+        return 0
+
+    if not args.no_exercise:
+        exercise_drivers()
+    entries = args.entries.split(",") if args.entries else None
+    findings: List[Finding] = analyze(entries=entries)
+    write_findings_jsonl(args.out, findings)
+    baseline = load_baseline(args.baseline)
+    new, allowed = partition_by_baseline(findings, baseline)
+    obs.metrics.set_gauge("analysis/new_violations", len(new))
+
+    checked = sorted(registry) if entries is None else entries
+    print(f"repro.analysis: {len(checked)} entry points, "
+          f"{len(findings)} findings ({len(allowed)} baselined, "
+          f"{len(new)} new) -> {args.out}")
+    if allowed:
+        print("baselined:")
+        for f in allowed:
+            print(f"  [allowed] {f.key}  ({baseline[f.key]})")
+    if new:
+        print("NEW findings:")
+        for f in new:
+            print(_fmt(f))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,183 @@
+"""Bucket-contract and purity/dtype-hygiene checkers.
+
+**bucket** (DESIGN.md §12): every declared batch dim / padded extent of an
+engine entry must be a pow2 bucket, every shape field of a
+`multilevel.note_program` signature must be pow2, and no two distinct
+signatures may land on the same bucket projection — two programs at one
+bucket means a shape leaked past the bucketing and will recompile.
+
+**hygiene**: traced regions must stay pure and dtype-stable —
+
+  * no `pure_callback` / `debug_callback` / `io_callback` inside a
+    scan/while body, except primitives an entry explicitly allowlists
+    (the `moe.observe_gates` tap);
+  * no float64/complex128 aval anywhere (the engine is strictly f32);
+  * no weak-typed scan carry (a bare python scalar like ``jnp.inf`` in a
+    carry is re-promoted against the strong side every round — the
+    recompile/promotion hazard class fixed in this PR) and no weak-typed
+    program output escaping the trace.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.tracing import TracedEntry, iter_eqns, scan_carry_avals
+
+CALLBACK_PRIMITIVES = ("pure_callback", "debug_callback", "io_callback")
+_BAD_DTYPES = ("float64", "complex128")
+
+
+def is_pow2(x: int) -> bool:
+    return x >= 1 and (x & (x - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# bucket contract
+# ---------------------------------------------------------------------------
+
+def check_bucket(traced: TracedEntry, entry) -> List[Finding]:
+    out: List[Finding] = []
+    if entry.bucket_dims is None:
+        return out
+    for dim, size in sorted(entry.bucket_dims(traced.args).items()):
+        if not is_pow2(int(size)):
+            out.append(Finding(
+                checker="bucket", severity="error", entry=entry.name,
+                code="non-pow2-dim", location=f"dim:{dim}",
+                message=f"{entry.name}: dim {dim}={size} is not a pow2 "
+                        f"bucket (DESIGN.md §12)",
+                detail={"dim": dim, "size": int(size)}))
+    return out
+
+
+#: per-family positions of shape fields in `multilevel.note_program`
+#: signatures (the fields that must be pow2 buckets); `k_pad` additionally
+#: must be a pow2 ≥ 4 (hypergraph k bucket floor).
+PROGRAM_SHAPE_FIELDS: Dict[str, Dict[str, Tuple[int, ...]]] = {
+    # ("kway", n_pad, e_pad, k, rounds_bucket, b_pad, use_kernel)
+    "kway": {"shape": (1, 2, 5)},
+    # ("hyper", n_pad, e_pad, p_pad, k_pad, rounds, objective, b_pad, uk)
+    "hyper": {"shape": (1, 2, 3, 7), "k_pad": (4,)},
+    # ("sep", n_pad, e_pad, rounds, b_pad, use_kernel)
+    "sep": {"shape": (1, 2, 4)},
+    "sepmulti": {"shape": (1, 2, 4)},
+}
+
+
+def _pow2_ceil(x: int) -> int:
+    out = 1
+    while out < x:
+        out *= 2
+    return out
+
+
+def check_program_registry(signatures: Iterable[tuple]) -> List[Finding]:
+    """Cross-check recorded `note_program` signatures: pow2 shape fields,
+    and no two distinct signatures at one bucket projection (a recompile
+    hazard — the second signature compiles a program the bucketing was
+    supposed to share)."""
+    out: List[Finding] = []
+    buckets: Dict[tuple, tuple] = {}
+    for sig in sorted(signatures):
+        fam = sig[0]
+        spec = PROGRAM_SHAPE_FIELDS.get(fam)
+        if spec is None:
+            out.append(Finding(
+                checker="bucket", severity="warning", entry="engine",
+                code="unknown-program-family", location=f"sig:{fam}",
+                message=f"note_program family {fam!r} has no shape-field "
+                        f"spec in the analyzer; add it to "
+                        f"PROGRAM_SHAPE_FIELDS",
+                detail={"sig": list(map(str, sig))}))
+            continue
+        for pos in spec["shape"]:
+            if not is_pow2(int(sig[pos])):
+                out.append(Finding(
+                    checker="bucket", severity="error", entry="engine",
+                    code="non-pow2-signature-field",
+                    location=f"sig:{fam}[{pos}]",
+                    message=f"program signature {sig} field {pos} = "
+                            f"{sig[pos]} is not pow2",
+                    detail={"sig": list(map(str, sig)), "pos": pos}))
+        for pos in spec.get("k_pad", ()):
+            if not (is_pow2(int(sig[pos])) and int(sig[pos]) >= 4):
+                out.append(Finding(
+                    checker="bucket", severity="error", entry="engine",
+                    code="bad-k-bucket", location=f"sig:{fam}[{pos}]",
+                    message=f"program signature {sig} k_pad = {sig[pos]} "
+                            f"is not a pow2 >= 4",
+                    detail={"sig": list(map(str, sig)), "pos": pos}))
+        shape_pos = set(spec["shape"]) | set(spec.get("k_pad", ()))
+        bucket = tuple(
+            _pow2_ceil(int(v)) if i in shape_pos else v
+            for i, v in enumerate(sig))
+        prev = buckets.get(bucket)
+        if prev is not None and prev != sig:
+            out.append(Finding(
+                checker="bucket", severity="error", entry="engine",
+                code="bucket-collision", location=f"sig:{fam}",
+                message=f"two program signatures share one bucket — "
+                        f"recompile hazard: {prev} vs {sig}",
+                detail={"a": list(map(str, prev)),
+                        "b": list(map(str, sig))}))
+        buckets.setdefault(bucket, sig)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# purity / dtype hygiene
+# ---------------------------------------------------------------------------
+
+def check_hygiene(traced: TracedEntry, entry) -> List[Finding]:
+    out: List[Finding] = []
+    jaxpr = traced.closed.jaxpr
+    for site in iter_eqns(jaxpr):
+        prim = site.eqn.primitive.name
+        if prim in CALLBACK_PRIMITIVES:
+            if site.in_loop and prim not in entry.allow_callbacks:
+                out.append(Finding(
+                    checker="hygiene", severity="error", entry=entry.name,
+                    code="callback-in-loop", location=site.path,
+                    message=f"{prim} inside a scan/while body of "
+                            f"{entry.name} — a host round-trip per "
+                            f"iteration (allowlist via the entry's "
+                            f"allow_callbacks if intentional)"))
+            elif not site.in_loop and prim not in entry.allow_callbacks:
+                out.append(Finding(
+                    checker="hygiene", severity="warning", entry=entry.name,
+                    code="callback", location=site.path,
+                    message=f"{prim} in the traced region of "
+                            f"{entry.name}"))
+        for v in site.eqn.outvars:
+            aval = getattr(v, "aval", None)
+            dt = str(getattr(aval, "dtype", ""))
+            if dt in _BAD_DTYPES:
+                out.append(Finding(
+                    checker="hygiene", severity="error", entry=entry.name,
+                    code="wide-dtype", location=site.path,
+                    message=f"{dt} value produced by {prim} in "
+                            f"{entry.name} — the engine is strictly "
+                            f"f32/int32"))
+                break
+        if prim == "scan":
+            for i, aval in enumerate(scan_carry_avals(site.eqn)):
+                if getattr(aval, "weak_type", False):
+                    out.append(Finding(
+                        checker="hygiene", severity="error",
+                        entry=entry.name, code="weak-carry",
+                        location=f"{site.path}.carry[{i}]",
+                        message=f"weak-typed scan carry {i} "
+                                f"({aval.dtype}) in {entry.name} — a bare "
+                                f"python scalar (e.g. jnp.inf) in the "
+                                f"carry; use an explicit dtype like "
+                                f"jnp.float32(...)"))
+    for i, v in enumerate(jaxpr.outvars):
+        aval = getattr(v, "aval", None)
+        if getattr(aval, "weak_type", False):
+            out.append(Finding(
+                checker="hygiene", severity="warning", entry=entry.name,
+                code="weak-output", location=f"outvar[{i}]",
+                message=f"weak-typed output {i} escapes the traced region "
+                        f"of {entry.name}"))
+    return out

@@ -1,0 +1,147 @@
+"""Source-level lints: host syncs on the serve path, registry coverage.
+
+**host_sync**: the serve hot loop must not synchronize with the device
+except at designed sync points (the sampled token feeding python-side slot
+state).  An AST walk over ``src/repro/serve/*.py`` flags ``.item()`` and
+``.block_until_ready()`` calls anywhere, and device→host materialisation
+(``np.asarray``/``jax.device_get``/``int(...)`` on step results) inside
+``for``/``while`` bodies — except inside functions listed in the module's
+``_HOST_SYNC_OK`` marker.  (Host syncs *inside* traced code show up as
+ConcretizationErrors at trace time and are reported by the tracer as
+``trace-error`` findings, so this lint only needs the eager glue.)
+
+**registry**: every public driver in `core/interface.py` must map to at
+least one registered entry point via `registry.DRIVER_ENTRIES` — new
+drivers cannot silently opt out of analysis.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional
+
+from repro.analysis.findings import Finding
+
+_SYNC_ATTRS = ("item", "block_until_ready")
+_MATERIALIZE = ("asarray", "device_get", "array")
+
+
+def _marker_names(tree: ast.Module) -> tuple:
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "_HOST_SYNC_OK":
+                    try:
+                        return tuple(ast.literal_eval(node.value))
+                    except ValueError:
+                        return ()
+    return ()
+
+
+class _ServeLinter(ast.NodeVisitor):
+    def __init__(self, relpath: str, allowed: tuple):
+        self.relpath = relpath
+        self.allowed = allowed
+        self.fn_stack: List[str] = []
+        self.loop_depth = 0
+        self.findings: List[Finding] = []
+
+    def _in_allowed(self) -> bool:
+        return any(fn in self.allowed for fn in self.fn_stack)
+
+    def visit_FunctionDef(self, node):
+        self.fn_stack.append(node.name)
+        outer_loops = self.loop_depth
+        self.loop_depth = 0
+        self.generic_visit(node)
+        self.loop_depth = outer_loops
+        self.fn_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _loop(self, node):
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_For = _loop
+    visit_While = _loop
+
+    def visit_Call(self, node):
+        fn = node.func
+        loc = f"{self.relpath}:{node.lineno}"
+        if isinstance(fn, ast.Attribute):
+            if fn.attr in _SYNC_ATTRS and not self._in_allowed():
+                self.findings.append(Finding(
+                    checker="host_sync", severity="error", entry="serve",
+                    code=f"sync-{fn.attr}", location=loc,
+                    message=f".{fn.attr}() on the serve path at {loc} — a "
+                            f"blocking device sync outside the designed "
+                            f"sync points (_HOST_SYNC_OK)"))
+            elif (fn.attr in _MATERIALIZE and self.loop_depth > 0
+                    and not self._in_allowed()):
+                self.findings.append(Finding(
+                    checker="host_sync", severity="warning", entry="serve",
+                    code="materialize-in-loop", location=loc,
+                    message=f".{fn.attr}(...) inside a serve loop at {loc} "
+                            f"— device→host materialisation per iteration; "
+                            f"add the function to _HOST_SYNC_OK if this is "
+                            f"a designed sync point"))
+        self.generic_visit(node)
+
+
+def _serve_dir() -> str:
+    import repro.serve as S
+    if getattr(S, "__file__", None):
+        return os.path.dirname(os.path.abspath(S.__file__))
+    return os.path.abspath(next(iter(S.__path__)))   # namespace package
+
+
+def check_host_sync(serve_dir: Optional[str] = None) -> List[Finding]:
+    serve_dir = serve_dir or _serve_dir()
+    findings: List[Finding] = []
+    for fname in sorted(os.listdir(serve_dir)):
+        if not fname.endswith(".py"):
+            continue
+        path = os.path.join(serve_dir, fname)
+        with open(path) as fh:
+            tree = ast.parse(fh.read(), filename=path)
+        linter = _ServeLinter(f"serve/{fname}", _marker_names(tree))
+        linter.visit(tree)
+        findings.extend(linter.findings)
+    return findings
+
+
+def check_driver_registry(driver_entries: Optional[dict] = None,
+                          registry: Optional[dict] = None) -> List[Finding]:
+    import inspect
+    from repro.core import interface
+    from repro.analysis import registry as reg
+    driver_entries = (reg.DRIVER_ENTRIES if driver_entries is None
+                      else driver_entries)
+    registry = reg.default_registry() if registry is None else registry
+    findings: List[Finding] = []
+    for name in sorted(dir(interface)):
+        fn = getattr(interface, name)
+        if (name.startswith("_") or not inspect.isfunction(fn)
+                or fn.__module__ != interface.__name__):
+            continue
+        entries = driver_entries.get(name)
+        if not entries:
+            findings.append(Finding(
+                checker="registry", severity="error", entry=name,
+                code="driver-unregistered", location=f"interface.{name}",
+                message=f"public driver {name} has no entry in "
+                        f"analysis.registry.DRIVER_ENTRIES — register a "
+                        f"canonical shape spec so it cannot opt out of "
+                        f"analysis"))
+            continue
+        for ename in entries:
+            if ename not in registry:
+                findings.append(Finding(
+                    checker="registry", severity="error", entry=name,
+                    code="driver-dangling-entry",
+                    location=f"interface.{name}",
+                    message=f"driver {name} maps to unknown analysis "
+                            f"entry {ename!r}"))
+    return findings

@@ -278,7 +278,7 @@ def _parhyp_refine_jit(mesh: Mesh, pv, pe, mask, netw, esize, vwgt,
 
     sizes0 = jnp.zeros((k,), jnp.float32).at[labels0].add(vwgt)
     keys = jax.random.split(key, rounds)
-    carry0 = (labels0, sizes0, jnp.inf, labels0, jnp.int32(0))
+    carry0 = (labels0, sizes0, jnp.float32(jnp.inf), labels0, jnp.int32(0))
     (labels, sizes, best_obj, best_labels, _), _ = jax.lax.scan(
         body, carry0, keys)
     # evaluate the final state too

@@ -114,7 +114,7 @@ def _hyper_refine_scan(hc: PinCoo, labels0: jax.Array, cap: jax.Array,
 
     sizes0 = jnp.zeros((k,), jnp.float32).at[labels0].add(vw)
     keys = jax.random.split(key, rounds)
-    carry0 = (labels0, sizes0, jnp.inf, labels0, jnp.int32(0))
+    carry0 = (labels0, sizes0, jnp.float32(jnp.inf), labels0, jnp.int32(0))
     (labels, sizes, best_obj, best_labels, _), _ = jax.lax.scan(
         body, carry0, keys)
     # evaluate the final state too

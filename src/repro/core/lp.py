@@ -128,13 +128,22 @@ def _segment_affinity(g: CooGraph, labels: jax.Array, sizes: jax.Array,
     n = g.n_pad
     e = g.e_pad
     tgt = labels[g.dst]
-    order = jnp.lexsort((tgt, g.src))          # runs of equal (src, tgt)
+    # sort live edges first and split runs on the live flag: real edges'
+    # positions and run boundaries then depend on real edges alone — by the
+    # masking contract (kernels/ops.py) padding (w == 0) edges may point
+    # anywhere, and letting their placement shift the sort would leak into
+    # the position-keyed tie-break noise below.  Padding edges land in
+    # dead-only runs, which aff_eff masks to _NEG.
+    dead = jnp.where(g.w > 0, 0, 1)
+    order = jnp.lexsort((tgt, g.src, dead))    # runs of equal (src, tgt)
     src_e = g.src[order]
     lab_e = tgt[order]
     ws = g.w[order]
+    live = ws > 0
     newrun = jnp.concatenate(
         [jnp.array([True]),
-         (src_e[1:] != src_e[:-1]) | (lab_e[1:] != lab_e[:-1])])
+         (src_e[1:] != src_e[:-1]) | (lab_e[1:] != lab_e[:-1])
+         | (live[1:] != live[:-1])])
     seg = jnp.cumsum(newrun) - 1                       # (e,) run index
     segsum = jnp.zeros((e,), jnp.float32).at[seg].add(ws)
     aff_run = segsum[seg]                              # per edge: run's sum
@@ -145,7 +154,6 @@ def _segment_affinity(g: CooGraph, labels: jax.Array, sizes: jax.Array,
     # size constraint: target must have room (own cluster always allowed)
     own = lab_e == labels[src_e]
     room = (sizes[lab_e] + g.vwgt[src_e] <= cap[lab_e]) | own
-    live = g.w[order] > 0                              # padding edges inert
     aff_eff = jnp.where(room & live, aff_run, _NEG)
     best = jnp.full((n,), _NEG, jnp.float32).at[src_e].max(aff_eff)
     is_best = aff_eff >= best[src_e] - 1e-9

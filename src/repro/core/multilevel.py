@@ -98,6 +98,14 @@ def note_bucket_pad(nrows: int) -> None:
         obs.metrics.inc("engine/bucket_pads", nrows)
 
 
+def program_signatures() -> list:
+    """Snapshot of every program signature seen this process — the input to
+    the `repro.analysis` bucket-contract checker, which proves each shape
+    field is a pow2 bucket and that no two signatures collide at one bucket
+    (a recompile hazard)."""
+    return sorted(_seen_programs)
+
+
 class ViewCache:
     """Mixin: lazily build device views once per medium instance.
 

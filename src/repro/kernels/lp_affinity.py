@@ -36,14 +36,17 @@ def _affinity_kernel(nbr_lab_ref, wgt_ref, out_ref):
     base = j * BK
     kids = base + jax.lax.broadcasted_iota(jnp.int32, (1, 1, BK), 2)
 
-    def step(d, acc):
+    # strong-typed counter scan (fori_loop would seed a weak-int32 carry
+    # from its python bounds — the repro.analysis hygiene contract)
+    def step(carry, _):
+        d, acc = carry
         lab_c = jax.lax.dynamic_slice(lab, (0, d * DC), (BN, DC))
         wgt_c = jax.lax.dynamic_slice(wgt, (0, d * DC), (BN, DC))
         hit = (lab_c[:, :, None] == kids).astype(jnp.float32)   # (BN, DC, BK)
-        return acc + jnp.sum(hit * wgt_c[:, :, None], axis=1)
+        return (d + 1, acc + jnp.sum(hit * wgt_c[:, :, None], axis=1)), None
 
-    acc = jnp.zeros((BN, BK), jnp.float32)
-    acc = jax.lax.fori_loop(0, dmax // DC, step, acc)
+    carry0 = (jnp.int32(0), jnp.zeros((BN, BK), jnp.float32))
+    (_, acc), _ = jax.lax.scan(step, carry0, None, length=dmax // DC)
     out_ref[...] = acc
 
 

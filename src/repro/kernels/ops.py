@@ -27,6 +27,19 @@ from repro.kernels import ssd_scan as _ssdk
 from repro.kernels import ref as _ref
 
 
+#: Machine-readable form of the masking contract above, keyed by public op:
+#: ``mask`` is the argument whose zeros mark padding slots, ``garbage`` the
+#: index arguments whose padded slots are unconstrained (any valid id).  The
+#: `repro.analysis` padding-inertness checker perturbs exactly the garbage
+#: slots and requires bit-identical real outputs.
+PADDING_CONTRACT = {
+    "lp_affinity": {"mask": "wgt", "garbage": ("nbr",)},
+    "sep_affinity": {"mask": "wgt", "garbage": ("nbr",)},
+    "pin_count": {"mask": "pin_mask", "garbage": ("pins",)},
+    "pin_affinity": {"mask": "pin_mask", "garbage": ("pins", "vnets")},
+}
+
+
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 

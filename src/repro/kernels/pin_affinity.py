@@ -40,14 +40,17 @@ def _pin_affinity_kernel(pin_lab_ref, mask_ref, netw_ref, cnt_ref, score_ref):
     base = j * BK
     kids = base + jax.lax.broadcasted_iota(jnp.int32, (1, 1, BK), 2)
 
-    def step(d, acc):
+    # strong-typed counter scan (fori_loop would seed a weak-int32 carry
+    # from its python bounds — the repro.analysis hygiene contract)
+    def step(carry, _):
+        d, acc = carry
         lab_c = jax.lax.dynamic_slice(lab, (0, d * DC), (BN, DC))
         msk_c = jax.lax.dynamic_slice(mask, (0, d * DC), (BN, DC))
         hit = (lab_c[:, :, None] == kids).astype(jnp.float32)  # (BN, DC, BK)
-        return acc + jnp.sum(hit * msk_c[:, :, None], axis=1)
+        return (d + 1, acc + jnp.sum(hit * msk_c[:, :, None], axis=1)), None
 
-    cnt = jnp.zeros((BN, BK), jnp.float32)
-    cnt = jax.lax.fori_loop(0, pmax // DC, step, cnt)
+    carry0 = (jnp.int32(0), jnp.zeros((BN, BK), jnp.float32))
+    (_, cnt), _ = jax.lax.scan(step, carry0, None, length=pmax // DC)
     cnt_ref[...] = cnt
     score_ref[...] = cnt * netw
 

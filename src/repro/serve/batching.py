@@ -37,6 +37,13 @@ from repro.obs.live import NULL_TELEMETRY
 from repro.serve.serve_step import decode_step, greedy_token
 
 
+#: Designed host sync points: functions where a device value *must* reach
+#: the host (the sampled token feeds the python-side slot state).  The
+#: `repro.analysis` host-sync lint skips device→host reads inside these and
+#: flags any that appear elsewhere on the serve path.
+_HOST_SYNC_OK = ("add", "step")
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
