@@ -43,6 +43,33 @@ def timed_call(fn, *args, **kw):
     return out, time.perf_counter() - t0
 
 
+def peak_rss_mb() -> float:
+    """Peak resident set size of this process in MiB (VmHWM), or 0.0 when
+    /proc is unavailable — the host-memory column of the scale benches."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return round(int(line.split()[1]) / 1024.0, 1)
+    except OSError:
+        pass
+    return 0.0
+
+
+def span_seconds(events, name: str) -> float:
+    """Total seconds spent inside ``name`` spans of an ``obs.Recorder``
+    event list (sums every matched B→E pair; ts is µs)."""
+    total, stack = 0.0, []
+    for ev in events:
+        if ev.get("name") != name:
+            continue
+        if ev.get("ph") == "B":
+            stack.append(ev["ts"])
+        elif ev.get("ph") == "E" and stack:
+            total += ev["ts"] - stack.pop()
+    return total / 1e6
+
+
 def run_metadata() -> dict:
     """Environment stamp for BENCH_*.json reports (DESIGN.md §11)."""
     import datetime

@@ -9,10 +9,59 @@ memetic smoke and the serve-telemetry smoke, writing ``BENCH_engine.json``,
 ``BENCH_nodesep.json``, ``BENCH_parhyp.json``, ``BENCH_memetic.json`` and
 ``BENCH_serve_obs.json`` (+ ``BENCH_serve_trace.json``, the Perfetto
 serve timeline) — the CI perf-trajectory records.
+
+``--scale`` / ``--scale-smoke`` run the million-vertex (resp. ~130k CI)
+``parhyp_scale`` cells.  Host/runtime flags for scale runs are set up
+*before* jax is imported:
+
+* ``--devices N`` → ``--xla_force_host_platform_device_count=N`` (SPMD
+  over N fake CPU devices);
+* ``JAX_ENABLE_X64=0`` / ``JAX_DEFAULT_DTYPE_BITS=32`` defaulted (the
+  engine is f32/int32 end to end);
+* ``--tcmalloc`` → re-exec with ``LD_PRELOAD=libtcmalloc`` and a high
+  ``TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD`` — glibc malloc returns the
+  multi-GB coarsening arenas to the OS poorly at 1M+ vertices.
 """
 from __future__ import annotations
 
+import os
 import sys
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path — pin the root so `from benchmarks import …` always resolves
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+_TCMALLOC = "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4"
+
+
+def _setup_env(argv: list) -> list:
+    """Consume env-shaping flags; must run before any jax import."""
+    args = list(argv)
+    if "--devices" in args:
+        i = args.index("--devices")
+        n = int(args[i + 1])
+        del args[i:i + 2]
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+    os.environ.setdefault("JAX_ENABLE_X64", "0")
+    os.environ.setdefault("JAX_DEFAULT_DTYPE_BITS", "32")
+    if "--tcmalloc" in args:
+        args.remove("--tcmalloc")
+        if (not os.environ.get("_REPRO_TCMALLOC")
+                and os.path.exists(_TCMALLOC)):
+            env = dict(os.environ, LD_PRELOAD=_TCMALLOC,
+                       TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="60000000000",
+                       _REPRO_TCMALLOC="1")
+            os.execve(sys.executable, [sys.executable] + sys.argv, env)
+    return args
+
+
+def scale(smoke_run: bool) -> None:
+    from benchmarks import bench_parhyp
+    bench_parhyp.scale_main(smoke=smoke_run)
 
 
 def smoke() -> None:
@@ -69,7 +118,12 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    if "--smoke" in sys.argv[1:]:
+    _args = _setup_env(sys.argv[1:])
+    if "--scale-smoke" in _args:
+        scale(smoke_run=True)
+    elif "--scale" in _args:
+        scale(smoke_run=False)
+    elif "--smoke" in _args:
         smoke()
     else:
         main()

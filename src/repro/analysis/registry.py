@@ -301,15 +301,24 @@ def _project_sep(outs):
 # distributed / memetic entries (shard_map)
 # ---------------------------------------------------------------------------
 
-def _build_parhyp():
+def _two_device_mesh_11():
+    """1-device 2-D (nets, verts) mesh — the canonical 2-D layout spec."""
+    import jax
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("nets", "verts"))
+
+
+def _build_parhyp(two_d: bool = False):
     import jax
     from repro.core.hypergraph import dist as D
-    from repro.core.hypergraph.refine import _caps_for
+    from repro.core.hypergraph.refine import _caps_for, _pad_caps, k_bucket
     hg = _tiny_hypergraph()
-    sh = D.shard_hypergraph(hg, 1)
-    mesh = _one_device_mesh("nets")
+    sh = D.shard_hypergraph(hg, (1, 1) if two_d else 1)
+    mesh = _two_device_mesh_11() if two_d else _one_device_mesh("nets")
     k, rounds = 3, 4
-    cap = np.asarray(_caps_for(hg, k, 0.10), np.float32)
+    k_pad = k_bucket(k)
+    cap = np.asarray(_pad_caps(_caps_for(hg, k, 0.10), k_pad), np.float32)
     labels0 = np.zeros(sh.n_pad, np.int32)
     labels0[:hg.n] = np.arange(hg.n) % k
     key = np.asarray(jax.random.PRNGKey(11))
@@ -317,8 +326,9 @@ def _build_parhyp():
 
     def fn(pv, pe, mask, netw, esize, vwgt, labels0, cap, key, force):
         return D._parhyp_refine_jit(mesh, pv, pe, mask, netw, esize, vwgt,
-                                    labels0, cap, key, force, sh.rows_v, k,
-                                    rounds, 1, "nets", "km1")
+                                    labels0, cap, key, force, sh.rows_v,
+                                    sh.n_col, sh.e_rows, k_pad, rounds,
+                                    "km1")
     return fn, (sh.pv, sh.pe, sh.mask, sh.netw, sh.esize, sh.vwgt,
                 labels0, cap, key, force)
 
@@ -326,7 +336,7 @@ def _build_parhyp():
 def _parhyp_bucket_dims(args):
     pv, netw, vwgt = args[0], args[3], args[5]
     return {"p_shard": pv.shape[1], "e_pad": netw.shape[0],
-            "n_pad": vwgt.shape[0]}
+            "n_pad": vwgt.shape[0], "k_pad": args[7].shape[0]}
 
 
 def _perturb_parhyp(args, rng):
@@ -342,7 +352,80 @@ def _perturb_parhyp(args, rng):
 
 
 def _project_parhyp(outs):
+    return [_np(outs[0])[:20], _np(outs[1]), _np(outs[2])]
+
+
+def _build_parhyp_cluster():
+    from repro.core.hypergraph import dist as D
+    hg = _tiny_hypergraph()
+    sh = D.shard_hypergraph(hg, 1)
+    mesh = _one_device_mesh("nets")
+    labels0 = np.arange(sh.n_pad, dtype=np.int32)
+    capv = np.full(sh.n_pad, 8.0, np.float32)
+    parity0 = np.int32(0)
+
+    def fn(pv, pe, mask, netw, esize, vwgt, labels0, capv, parity0):
+        return D._parhyp_cluster_jit(mesh, pv, pe, mask, netw, esize, vwgt,
+                                     labels0, capv, parity0, sh.rows_v,
+                                     sh.n_col, sh.e_rows, 4)
+    return fn, (sh.pv, sh.pe, sh.mask, sh.netw, sh.esize, sh.vwgt,
+                labels0, capv, parity0)
+
+
+def _cluster_bucket_dims(args):
+    pv, netw, vwgt = args[0], args[3], args[5]
+    return {"p_shard": pv.shape[1], "e_pad": netw.shape[0],
+            "n_pad": vwgt.shape[0]}
+
+
+def _perturb_parhyp_cluster(args, rng):
+    pv, pe, mask = (np.array(a) for a in args[:3])
+    n_pad, e_pad = args[5].shape[0], args[3].shape[0]
+    pad = mask == 0
+    pv = _garble(pv, pad, n_pad, rng)
+    pe = _garble(pe, pad, e_pad, rng)
+    # padding vertices (vwgt 0) may start in any singleton cluster
+    labels0 = np.array(args[6])
+    labels0[20:] = rng.integers(20, n_pad, size=labels0[20:].shape,
+                                dtype=labels0.dtype)
+    return (pv, pe, mask) + tuple(args[3:6]) + (labels0,) + tuple(args[7:])
+
+
+def _project_parhyp_cluster(outs):
     return [_np(outs[0])[:20], _np(outs[1])]
+
+
+def _build_parhyp_contract():
+    from repro.core.hypergraph import dist as D
+    hg = _tiny_hypergraph()
+    sh = D.shard_hypergraph(hg, 1)
+    mesh = _one_device_mesh("nets")
+    labels = (np.arange(sh.n_pad, dtype=np.int32) // 2) * 2
+
+    def fn(pv, pe, mask, netw, vwgt, labels):
+        return D._parhyp_contract_jit(mesh, pv, pe, mask, netw, vwgt,
+                                      labels, sh.n_col, sh.e_rows)
+    return fn, (sh.pv, sh.pe, sh.mask, sh.netw, sh.vwgt, labels)
+
+
+def _perturb_parhyp_contract(args, rng):
+    pv, pe, mask = (np.array(a) for a in args[:3])
+    n_pad, e_pad = args[4].shape[0], args[3].shape[0]
+    pad = mask == 0
+    pv = _garble(pv, pad, n_pad, rng)
+    pe = _garble(pe, pad, e_pad, rng)
+    labels = np.array(args[5])
+    labels[20:] = rng.integers(20, n_pad, size=labels[20:].shape,
+                               dtype=labels.dtype)
+    return (pv, pe, mask) + tuple(args[3:5]) + (labels,)
+
+
+def _project_parhyp_contract(outs):
+    # coarse_of of padding vertices depends on their (free) input labels;
+    # every other output is fully determined by the real slots
+    pv2, pe2, mask2, netw2, esize2, cvw, coarse_of, nc, hi = outs
+    return [_np(pv2), _np(pe2), _np(mask2), _np(netw2), _np(esize2),
+            _np(cvw), _np(coarse_of)[:20], _np(nc), _np(hi)]
 
 
 def _build_migrate():
@@ -565,6 +648,32 @@ ENTRIES: Tuple[EntryPoint, ...] = (
         drivers=("parhyp",),
     ),
     EntryPoint(
+        name="dist/parhyp_round_2d",
+        build=functools.partial(_build_parhyp, True),
+        tags=_T({"bucket", "padding", "spmd", "hygiene"}),
+        bucket_dims=_parhyp_bucket_dims,
+        padding=PaddingSpec(_perturb_parhyp, _project_parhyp),
+        drivers=("parhyp",),
+    ),
+    EntryPoint(
+        name="dist/cluster_round",
+        build=_build_parhyp_cluster,
+        tags=_T({"bucket", "padding", "spmd", "hygiene"}),
+        bucket_dims=_cluster_bucket_dims,
+        padding=PaddingSpec(_perturb_parhyp_cluster,
+                            _project_parhyp_cluster),
+        drivers=("parhyp",),
+    ),
+    EntryPoint(
+        name="dist/contract",
+        build=_build_parhyp_contract,
+        tags=_T({"bucket", "padding", "spmd", "hygiene"}),
+        bucket_dims=_cluster_bucket_dims,
+        padding=PaddingSpec(_perturb_parhyp_contract,
+                            _project_parhyp_contract),
+        drivers=("parhyp",),
+    ),
+    EntryPoint(
         name="memetic/migrate_ring",
         build=_build_migrate,
         tags=_T({"spmd", "hygiene"}),
@@ -649,7 +758,8 @@ DRIVER_ENTRIES: Dict[str, Tuple[str, ...]] = {
     "kahypar": ("engine/hyper_refine_km1", "engine/hyper_refine_cut",
                 "engine/cluster_lp"),
     "kahyparE": ("engine/hyper_refine_km1", "memetic/migrate_ring"),
-    "parhyp": ("dist/parhyp_round",),
+    "parhyp": ("dist/parhyp_round", "dist/parhyp_round_2d",
+               "dist/cluster_round", "dist/contract"),
     "node_separator": ("engine/sep_refine", "engine/cluster_lp"),
     "reduced_nd": ("engine/sep_refine", "engine/kway_refine"),
     "fast_reduced_nd": ("engine/sep_refine", "engine/kway_refine"),

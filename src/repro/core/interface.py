@@ -147,8 +147,12 @@ def parhyp(n: int, m: int, vwgt, ewgt, eptr, eind, nparts: int,
 
     Same array convention as the ``kahypar`` entry; ``preconfiguration``
     ∈ {"ultrafast", "fast", "eco"} selects the engine preset and the
-    distributed-LP round count, ``mesh`` an optional jax Mesh with a
-    ``nets`` axis (defaults to all local devices).
+    distributed-LP round count, ``mesh`` an optional jax Mesh — 1-D
+    ``("nets",)`` or 2-D ``("nets", "verts")`` (defaults to all local
+    devices on a 1-D nets axis).  Above the gather-to-one-PE floor the
+    whole V-cycle (LP-clustering coarsening, contraction, refinement)
+    stays device-resident; small inputs run the host-orchestrated
+    multilevel with distributed refinement.
     """
     from repro.core import hypergraph as H
     hg = H.Hypergraph.from_arrays(

@@ -93,6 +93,13 @@ def note_program(*sig) -> None:
         obs.metrics.inc("engine/programs")
 
 
+def coarsen_stop_n(params, k: int) -> int:
+    """Coarsening stop size shared by every multilevel driver: keep
+    ~contraction_stop_factor·k nodes, floored at stop_n_floor.  Any params
+    object with those two attributes (EngineParams, KahyparConfig) works."""
+    return max(params.contraction_stop_factor * k, params.stop_n_floor)
+
+
 def note_bucket_pad(nrows: int) -> None:
     if nrows:
         obs.metrics.inc("engine/bucket_pads", nrows)
@@ -269,7 +276,7 @@ def build_hierarchy(medium: Medium, k: int, seed: int,
     cur_protect = list(protect) if protect else None
     levels = [Level(medium, None, cur_protect)]
     cur = medium
-    stop_n = max(p.contraction_stop_factor * k, p.stop_n_floor)
+    stop_n = coarsen_stop_n(p, k)
     lvl = 0
     with rec.span("hierarchy", n=medium.n, k=k,
                   protected=len(cur_protect or ())):

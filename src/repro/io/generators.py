@@ -179,6 +179,54 @@ def planted_hypergraph(n: int, m: int, blocks: int = 4,
     return Hypergraph.from_nets(n, nets, ewgt=ewgt)
 
 
+def rmat_hypergraph(scale: int, net_factor: float = 1.0,
+                    avg_pins: float = 6.0, max_pins: int = 64,
+                    seed: int = 0, a: float = 0.57,
+                    chunk: int = 1 << 18):
+    """Streaming RMAT-style power-law hypergraph (the million-vertex
+    ``parhyp_scale`` instance family): ``n = 2^scale`` vertices and
+    ``~net_factor·n`` nets whose sizes follow a clipped Pareto tail and
+    whose pins are drawn by 1-D bit-recursive skewed sampling (the RMAT
+    recursion applied to a single id), so vertex degrees are heavy-tailed
+    too.  Nets are generated in bounded chunks of ``chunk`` so peak
+    transient memory stays O(chunk·avg_pins) over the final arrays —
+    host-RSS-friendly at 1M+ nets."""
+    from repro.core.hypergraph.container import Hypergraph
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = int(round(net_factor * n))
+    perm = rng.permutation(n)
+    eind_parts, size_parts = [], []
+    done = 0
+    while done < m:
+        b = int(min(chunk, m - done))
+        # clipped-Pareto net sizes with mean ~avg_pins
+        sz = 2 + np.floor(1.5 * (avg_pins - 2.0)
+                          * rng.pareto(2.5, b)).astype(np.int64)
+        sz = np.minimum(sz, max_pins)
+        total = int(sz.sum())
+        v = np.zeros(total, dtype=np.int64)
+        for _ in range(scale):
+            v = (v << 1) | (rng.random(total) >= a)
+        net = np.repeat(np.arange(b, dtype=np.int64), sz)
+        # dedup pins within each net (sort on the flat (net, vertex) key)
+        flat = np.sort(net * n + v, kind="stable")
+        keep = np.concatenate([[True], flat[1:] != flat[:-1]])
+        flat = flat[keep]
+        net_k, v_k = flat // n, flat % n
+        cnt = np.bincount(net_k, minlength=b)
+        # single-pin nets carry no objective — drop them
+        ok = cnt >= 2
+        keep_pin = ok[net_k]
+        eind_parts.append(perm[v_k[keep_pin]])
+        size_parts.append(cnt[ok])
+        done += b
+    sizes = np.concatenate(size_parts)
+    eptr = np.zeros(len(sizes) + 1, dtype=np.int64)
+    np.cumsum(sizes, out=eptr[1:])
+    return Hypergraph.from_arrays(n, eptr, np.concatenate(eind_parts))
+
+
 def grid_hypergraph(rows: int, cols: int):
     """Each 2×2 window of a grid becomes a 4-pin net — mesh-like, low λ."""
     from repro.core.hypergraph.container import Hypergraph
@@ -196,6 +244,7 @@ FAMILIES_H = {
     "hplant": lambda seed=0: planted_hypergraph(2048, 3072, blocks=8,
                                                 seed=seed),
     "hgrid": lambda seed=0: grid_hypergraph(40, 40),
+    "hrmat": lambda seed=0: rmat_hypergraph(11, seed=seed),
 }
 
 

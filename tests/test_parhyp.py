@@ -152,3 +152,166 @@ def test_parhyp_multidevice_subprocess():
     r = subprocess.run([sys.executable, "-c", code], env=env,
                        capture_output=True, text=True, timeout=600)
     assert "MULTIDEV_OK" in r.stdout, r.stdout + r.stderr
+
+
+# -- 2-D (nets, verts) meshes ------------------------------------------------
+
+def _mesh11() -> Mesh:
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("nets", "verts"))
+
+
+def test_shard_hypergraph_2d_conserves_and_splits_columns():
+    sh = shard_hypergraph(HG, (2, 2))
+    assert (sh.s_nets, sh.s_verts, sh.n_shards) == (2, 2, 4)
+    assert sh.n_pad == sh.s_verts * sh.n_col == sh.n_shards * sh.rows_v
+    assert sh.e_pad == sh.s_nets * sh.e_rows
+    assert float(sh.mask.sum()) == HG.pins
+    real = sh.mask.reshape(-1) > 0
+    got = np.stack([sh.pe.reshape(-1)[real], sh.pv.reshape(-1)[real]], 1)
+    want = np.stack([HG.pin_sources(), HG.eind], 1)
+    assert np.array_equal(got[np.lexsort(got.T)], want[np.lexsort(want.T)])
+    # shard ie*s_verts+jv holds exactly net-row ie ∩ vertex-column jv
+    shard = np.repeat(np.arange(4), sh.p_shard)[real]
+    pe_r, pv_r = sh.pe.reshape(-1)[real], sh.pv.reshape(-1)[real]
+    assert np.array_equal(shard // 2, pe_r // sh.e_rows)
+    assert np.array_equal(shard % 2, pv_r // sh.n_col)
+
+
+def test_refine_2d_one_device_layout_parity():
+    """A (1,1) 2-D mesh must be bit-identical to the 1-D mesh (and so to
+    the sequential oracle) — the layout-parity half of the 2-D contract."""
+    part0 = random_partition(HG, 4, seed=1)
+    a = parhyp_refine(HG, part0, 4, mesh=_mesh1(), rounds=6, seed=3)
+    b = parhyp_refine(HG, part0, 4, mesh=_mesh11(), rounds=6, seed=3)
+    assert np.array_equal(a, b)
+
+
+# -- distributed coarsening --------------------------------------------------
+
+def test_cluster_round_shard_map_matches_local_oracle():
+    """The clustering round body called WITHOUT shard_map (ax=None — every
+    collective an identity) is the sequential oracle; the 1-device
+    shard_map run must reproduce it bit-for-bit."""
+    import jax.numpy as jnp
+    from repro.core.hypergraph import dist as D
+    sh = shard_hypergraph(HG, 1)
+    args = [jnp.asarray(a) for a in
+            (sh.pv, sh.pe, sh.mask, sh.netw, sh.esize, sh.vwgt)]
+    labels = jnp.asarray(np.arange(sh.n_pad, dtype=np.int32))
+    capv = jnp.asarray(np.full(sh.n_pad, 40.0, np.float32))
+    iters = 4
+    got, _ = D._parhyp_cluster_jit(_mesh1(), *args, labels, capv,
+                                   jnp.int32(0), sh.rows_v, sh.n_col,
+                                   sh.e_rows, iters)
+    want = labels
+    for it in range(iters):
+        want, _ = D._cluster_round_local(
+            *args, want, capv, jnp.int32(it), rows_v=sh.rows_v,
+            n_col=sh.n_col, e_rows=sh.e_rows, s_nets=1, s_verts=1,
+            ax_n=None, ax_v=None)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    # the round did something and respected the size cap
+    assert not np.array_equal(np.asarray(got), np.arange(sh.n_pad))
+    szs = np.zeros(sh.n_pad)
+    np.add.at(szs, np.asarray(got), sh.vwgt)
+    assert szs.max() <= 40.0
+
+
+@pytest.mark.parametrize("objective", ["km1", "cut"])
+def test_device_contraction_preserves_objective(objective):
+    """Device contraction vs the host `coarsen.contract` oracle: for any
+    coarse partition both coarse hypergraphs and the fine hypergraph agree
+    exactly on the objective (contraction is objective-neutral)."""
+    import jax.numpy as jnp
+    from repro.core.hypergraph import dist as D
+    from repro.core.hypergraph.coarsen import contract
+    sh = shard_hypergraph(HG, 1)
+    args = [jnp.asarray(a) for a in
+            (sh.pv, sh.pe, sh.mask, sh.netw, sh.esize, sh.vwgt)]
+    labels, _ = D._parhyp_cluster_jit(
+        _mesh1(), *args, jnp.asarray(np.arange(sh.n_pad, dtype=np.int32)),
+        jnp.asarray(np.full(sh.n_pad, 40.0, np.float32)), jnp.int32(0),
+        sh.rows_v, sh.n_col, sh.e_rows, 4)
+    out = D._parhyp_contract_jit(_mesh1(), args[0], args[1], args[2],
+                                 args[3], args[5], labels, sh.n_col,
+                                 sh.e_rows)
+    pv2, pe2, mask2, netw2, esize2, cvw, coarse_of, nc, hi = out
+    assert int(hi) >= int(np.sum(np.asarray(mask2) > 0))
+    hg_c, ids = D._extract_coarsest(
+        D._DeviceLevel(pv2, pe2, mask2, netw2, esize2, cvw))
+    assert hg_c.n == int(nc) < HG.n
+    assert hg_c.total_vwgt() == HG.total_vwgt()
+    lab_h = np.asarray(labels)[:HG.n]
+    hg_h, cl = contract(HG, lab_h)
+    assert hg_h.n == hg_c.n
+    score = connectivity if objective == "km1" else cut_net
+    remap = np.zeros(sh.n_pad, np.int64)
+    remap[ids] = np.arange(len(ids))
+    co = remap[np.asarray(coarse_of)[:HG.n]]
+    rng = np.random.default_rng(5)
+    for trial in range(3):
+        g = rng.integers(0, 4, sh.n_pad)
+        fine = g[lab_h]
+        f_dev = np.zeros(hg_c.n, np.int64)
+        f_dev[co] = fine
+        f_host = np.zeros(hg_h.n, np.int64)
+        f_host[cl] = fine
+        want = score(HG, fine)
+        assert score(hg_c, f_dev) == want
+        assert score(hg_h, f_host) == want
+
+
+def test_parhyp_device_path_runs_device_coarsening():
+    """With the gather-to-one-PE floor lifted, parhyp must take the
+    device-resident V-cycle and record coarsening spans."""
+    from repro import obs
+    rec = obs.Recorder()
+    part = parhyp(HG, 4, 0.03, "fast", seed=1, mesh=_mesh1(), report=rec,
+                  device_min_n=0)
+    assert is_feasible(HG, part, 4, 0.03)
+    names = {e.get("name") for e in rec.events}
+    assert "parhyp_coarsen" in names, sorted(names)
+    assert rec.counters().get("parhyp/device_levels", 0) >= 2
+
+
+@pytest.mark.slow
+def test_parhyp_mesh_layout_parity_subprocess():
+    """4 fake devices: (4,), (4,1) and (1,4) meshes must refine
+    bit-identically, and a genuinely 2-D (2,2) mesh must complete the full
+    device pipeline feasibly within the coarsening quality gate."""
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.io.generators import planted_hypergraph
+        from repro.core.hypergraph import connectivity, is_feasible, kahypar
+        from repro.core.hypergraph.dist import parhyp, parhyp_refine
+        from repro.core.hypergraph.initial import random_partition
+        assert len(jax.devices()) == 4
+        devs = np.array(jax.devices())
+        hg = planted_hypergraph(300, 450, blocks=4, seed=7)
+        part0 = random_partition(hg, 4, seed=1)
+        outs = []
+        for shape, axes in (((4,), ("nets",)),
+                            ((4, 1), ("nets", "verts")),
+                            ((1, 4), ("nets", "verts"))):
+            mesh = Mesh(devs.reshape(shape), axes)
+            outs.append(parhyp_refine(hg, part0, 4, mesh=mesh, rounds=6,
+                                      seed=3))
+        assert np.array_equal(outs[0], outs[1])
+        assert np.array_equal(outs[0], outs[2])
+        mesh22 = Mesh(devs.reshape(2, 2), ("nets", "verts"))
+        part = parhyp(hg, 4, 0.03, "fast", seed=1, mesh=mesh22,
+                      device_min_n=0)
+        assert is_feasible(hg, part, 4, 0.03)
+        km1_d = connectivity(hg, part)
+        km1_s = connectivity(hg, kahypar(hg, 4, 0.03, "fast", seed=1))
+        assert km1_d <= 1.05 * km1_s, (km1_d, km1_s)
+        print("PARITY_OK", km1_d, km1_s)
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "PARITY_OK" in r.stdout, r.stdout + r.stderr
